@@ -1,0 +1,78 @@
+"""Kernel micro-benchmarks: stagecc GEMM backends + flash attention +
+SSD scan, wall-clock on this host + model-cycle derivations.
+
+Prints CSV: name,us_per_call,derived.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pipeline import compile_gemm
+from repro.kernels import ops
+
+
+def _t(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> list:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # GEMM: XLA vs stagecc-jax vs stagecc-pallas(interpret)
+    for m, n, k in ((256, 256, 256), (512, 512, 512)):
+        a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+        xla = jax.jit(lambda x, y: x @ y)
+        rows.append((f"gemm{m}/xla", _t(xla, a, b), 2 * m * n * k))
+        ck = compile_gemm(m, n, k, schedule="tpu_mxu_kgrid")
+        rows.append((f"gemm{m}/stagecc_jax", _t(ck.run_jax, a, b),
+                     ck.cycles.total))
+        if ck.run_pallas is not None:
+            rows.append((f"gemm{m}/stagecc_pallas_interp",
+                         _t(ck.run_pallas, a, b, reps=1), ck.cycles.total))
+
+    # attention: XLA blockwise path vs pallas flash (interpret)
+    q = jnp.asarray(rng.standard_normal((4, 512, 64)), jnp.float32)
+    rows.append(("attn_512/xla",
+                 _t(lambda *xs: ops.attention(*xs, backend="xla"), q, q, q),
+                 4 * 4 * 512 * 512 * 64))
+    rows.append(("attn_512/pallas_interp",
+                 _t(lambda *xs: ops.attention(*xs, backend="pallas"),
+                    q, q, q, reps=1), 4 * 4 * 512 * 512 * 64))
+
+    # SSD
+    S, H, P, N = 512, 8, 32, 16
+    x = jnp.asarray(rng.standard_normal((S, H, P)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.standard_normal((S, H))) * 0.1, jnp.float32)
+    A = jnp.asarray(-np.abs(rng.standard_normal(H)), jnp.float32)
+    B = jnp.asarray(rng.standard_normal((S, N)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((S, N)), jnp.float32)
+    rows.append(("ssd_512/chunked_xla",
+                 _t(lambda *xs: ops.ssd(*xs, backend="xla"), x, dt, A, B, C),
+                 S * H * P * N))
+    rows.append(("ssd_512/pallas_interp",
+                 _t(lambda *xs: ops.ssd(*xs, backend="pallas"),
+                    x, dt, A, B, C, reps=1), S * H * P * N))
+    return rows
+
+
+def main():
+    print("name,us_per_call,derived")
+    for name, us, derived in run():
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Roofline table builder — reads the dry-run JSONs and renders the
+EXPERIMENTS.md §Roofline table (single-pod) plus the multi-pod deltas.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load(dirpath: str) -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def fmt_bytes(b: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB", "PB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}EB"
+
+
+def render(recs: List[Dict], mesh: str = "16x16") -> str:
+    rows = []
+    head = (f"| arch | shape | compute s | memory s | collective s | "
+            f"bottleneck | useful (6ND/HLO) | state/dev | temp/dev |")
+    sep = "|" + "---|" * 9
+    rows.append(head)
+    rows.append(sep)
+    for r in recs:
+        if r.get("skipped") or r.get("mesh") != mesh or r.get("tag"):
+            continue
+        ro = r["roofline"]
+        mem = r.get("memory_analysis", {})
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {ro['compute_s']:.4f} | "
+            f"{ro['memory_s']:.4f} | {ro['collective_s']:.4f} | "
+            f"**{ro['bottleneck']}** | {ro['useful_ratio']:.3f} | "
+            f"{fmt_bytes(r['state_bytes_per_device'])} | "
+            f"{fmt_bytes(mem.get('temp_size_in_bytes', 0))} |")
+    return "\n".join(rows)
+
+
+def multi_pod_deltas(recs: List[Dict]) -> str:
+    single = {(r["arch"], r["shape"]): r for r in recs
+              if r.get("mesh") == "16x16" and not r.get("skipped")
+              and not r.get("tag")}
+    multi = {(r["arch"], r["shape"]): r for r in recs
+             if r.get("mesh") == "2x16x16" and not r.get("skipped")
+             and not r.get("tag")}
+    rows = ["| arch | shape | coll bytes 1-pod | coll bytes 2-pod | ratio |",
+            "|---|---|---|---|---|"]
+    for key in sorted(single):
+        if key not in multi:
+            continue
+        c1 = single[key]["collectives"]["total_bytes"]
+        c2 = multi[key]["collectives"]["total_bytes"]
+        rows.append(f"| {key[0]} | {key[1]} | {fmt_bytes(c1)} | "
+                    f"{fmt_bytes(c2)} | {c2 / max(c1, 1):.2f}x |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    if args.csv:
+        print("arch,shape,mesh,compute_s,memory_s,collective_s,bottleneck,"
+              "useful,flops_dev,coll_bytes")
+        for r in recs:
+            if r.get("skipped") or r.get("tag"):
+                continue
+            ro = r["roofline"]
+            print(f"{r['arch']},{r['shape']},{r['mesh']},"
+                  f"{ro['compute_s']:.6f},{ro['memory_s']:.6f},"
+                  f"{ro['collective_s']:.6f},{ro['bottleneck']},"
+                  f"{ro['useful_ratio']:.4f},{ro['flops_per_device']:.3e},"
+                  f"{ro['coll_bytes_per_device']:.3e}")
+        return
+    n_ok = sum(1 for r in recs if not r.get("skipped") and not r.get("tag"))
+    n_skip = sum(1 for r in recs if r.get("skipped"))
+    print(f"# Roofline — {n_ok} compiled cells, {n_skip} skip records\n")
+    print("## single-pod (16x16 = 256 chips)\n")
+    print(render(recs, "16x16"))
+    print("\n## multi-pod collective growth (2x16x16 = 512 chips)\n")
+    print(multi_pod_deltas(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""TABLE I reproduction: consumed clock cycles of GEMM under the paper's
+two schedules (nested vs inner-flattened), sizes 4..128, plus the
+TPU-native schedules as the beyond-paper comparison.
+
+Prints CSV: name,us_per_call,derived
+  - model cycles for both paper schedules + paper's published numbers
+  - measured wall time of the stagecc jax backend executing the same
+    kernels on this host (correctness-bearing, not roofline-bearing).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.pipeline import compile_gemm
+
+PAPER = {4: (1_498, 1_114), 8: (10_762, 7_946), 16: (81_802, 60_298),
+         32: (867_594, 470_282), 64: (5_042_698, 3_527_115),
+         128: (38_324_504, 26_806_047)}
+
+SIZES = (4, 8, 16, 32, 64, 128)
+
+
+def _time_call(fn, *args, reps=3):
+    fn(*args)                                  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    if hasattr(out, "block_until_ready"):
+        out.block_until_ready()
+    elif isinstance(out, (list, tuple)) and hasattr(out[0],
+                                                    "block_until_ready"):
+        out[0].block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> list:
+    rows = []
+    for s in SIZES:
+        nested = compile_gemm(s, s, s, schedule="nested",
+                              want_jax=True, want_pallas=False)
+        flat = compile_gemm(s, s, s, schedule="inner_flattened",
+                            want_jax=False, want_pallas=False)
+        mxu = compile_gemm(s, s, s, schedule="tpu_mxu_kgrid",
+                           want_jax=False, want_pallas=False)
+        pn, pf = PAPER[s]
+        rng = np.random.default_rng(s)
+        a = rng.standard_normal((s, s)).astype(np.float32)
+        b = rng.standard_normal((s, s)).astype(np.float32)
+        us = _time_call(nested.run_jax, a, b) if s <= 32 else float("nan")
+        rows.append((f"table1/gemm{s}x{s}/nested_model_cycles", us,
+                     nested.cycles.total))
+        rows.append((f"table1/gemm{s}x{s}/flattened_model_cycles",
+                     float("nan"), flat.cycles.total))
+        rows.append((f"table1/gemm{s}x{s}/paper_nested", float("nan"), pn))
+        rows.append((f"table1/gemm{s}x{s}/paper_flattened", float("nan"),
+                     pf))
+        rows.append((f"table1/gemm{s}x{s}/model_ratio", float("nan"),
+                     round(nested.cycles.total / flat.cycles.total, 3)))
+        rows.append((f"table1/gemm{s}x{s}/tpu_mxu_cycles", float("nan"),
+                     mxu.cycles.total))
+    return rows
+
+
+def main():
+    print("name,us_per_call,derived")
+    for name, us, derived in run():
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

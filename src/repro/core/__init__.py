@@ -1,0 +1,23 @@
+"""stagecc — the paper's compiler infrastructure, TPU-native.
+
+Levels (Fig. 1 of the paper):
+    frontend (SYCL/DPC++ role)  ->  TensorIR (MLIR role)
+        ->  LoopIR (Calyx role)  ->  backends (RTL-emission role)
+with cycle/resource models standing in for Vivado simulation/synthesis.
+"""
+
+from .autotune import best_schedule, compile_gemm_autotuned
+from .frontend import spec, trace
+from .lowering import LoweringOptions, lower_graph
+from .machine_model import TPU_V5E, MachineModel, cycles, flops, hbm_bytes, resources
+from .passes import PASS_REGISTRY, parse_pipeline, register_pass, run_pipeline
+from .pipeline import SCHEDULES, CompiledKernel, compile_gemm, compile_traced
+from .tensor_ir import Graph, OP_REGISTRY, TensorType, register_op
+
+__all__ = [
+    "spec", "trace", "LoweringOptions", "lower_graph", "TPU_V5E",
+    "MachineModel", "cycles", "flops", "hbm_bytes", "resources",
+    "PASS_REGISTRY", "parse_pipeline", "register_pass", "run_pipeline",
+    "SCHEDULES", "CompiledKernel", "compile_gemm", "compile_traced",
+    "Graph", "OP_REGISTRY", "TensorType", "register_op",
+]

@@ -1,0 +1,149 @@
+"""JAX/XLA backend: generate a jittable jnp function from LoopIR.
+
+This is the "standalone platform" of the paper's future-work (2): the same
+scheduled IR that emits a pallas kernel can instead target plain XLA,
+making the stack runnable on any JAX backend (CPU of this container, GPU,
+TPU) with no code change.
+
+Codegen strategy: structural recursion over the statement tree, building
+jnp expressions with functional updates.  Loop extents are static, so
+SEQUENTIAL loops become ``lax.fori_loop`` when profitable and UNROLLED /
+GRID / VECTOR loops become python-level unrolling at trace time.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .loop_ir import (EwiseTile, Kernel, Loop, LoopKind, MatmulTile, MemSpace,
+                      Stmt, TileRef, ZeroTile)
+
+_EWISE_JNP = {
+    "add": lambda a, b: a + b,
+    "sub": lambda a, b: a - b,
+    "mul": lambda a, b: a * b,
+    "maximum": jnp.maximum,
+    "relu": lambda a: jnp.maximum(a, 0),
+    "gelu": jax.nn.gelu,
+    "exp": jnp.exp,
+    "neg": lambda a: -a,
+    "copy": lambda a: a,
+}
+
+_JNP_DTYPE = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+              "float16": jnp.float16, "int32": jnp.int32, "int8": jnp.int8}
+
+# unroll python-side below this trip count; lax.fori_loop above
+_FORI_THRESHOLD = 8
+
+
+def emit(kernel: Kernel) -> Callable[..., List[jax.Array]]:
+    """Return ``f(*inputs) -> [outputs]`` implementing the kernel."""
+    kernel.verify()
+    out_names = {b.name for b in kernel.outputs}
+    in_params = [b for b in kernel.params if b.name not in out_names]
+
+    def fn(*inputs):
+        if len(inputs) > len(in_params):
+            raise ValueError(f"{kernel.name}: expected <= {len(in_params)} inputs")
+        mem: Dict[str, jax.Array] = {}
+        it = iter(inputs)
+        for b in in_params:
+            try:
+                a = next(it)
+            except StopIteration:
+                mem[b.name] = jnp.zeros(b.shape, _JNP_DTYPE[b.type.dtype])
+                continue
+            mem[b.name] = jnp.asarray(a, _JNP_DTYPE[b.type.dtype])
+        for b in kernel.outputs:
+            mem[b.name] = jnp.zeros(b.shape, _JNP_DTYPE[b.type.dtype])
+        for b in kernel.scratch:
+            mem[b.name] = jnp.zeros(b.shape, _JNP_DTYPE[b.type.dtype])
+
+        def read(ref: TileRef, env):
+            starts = [e.evaluate(env) * t for e, t in zip(ref.index, ref.tile)]
+            return jax.lax.dynamic_slice(mem[ref.buffer.name], starts, ref.tile)
+
+        def write(ref: TileRef, env, val):
+            starts = [e.evaluate(env) * t for e, t in zip(ref.index, ref.tile)]
+            mem[ref.buffer.name] = jax.lax.dynamic_update_slice(
+                mem[ref.buffer.name], val.astype(mem[ref.buffer.name].dtype),
+                starts)
+
+        def exec_stmt(s: Stmt, env):
+            if isinstance(s, ZeroTile):
+                write(s.dst, env, jnp.zeros(s.dst.tile, jnp.float32))
+            elif isinstance(s, MatmulTile):
+                a = read(s.lhs, env)
+                b = read(s.rhs, env)
+                c = jnp.dot(a, b, preferred_element_type=jnp.float32)
+                if s.accumulate:
+                    c = read(s.dst, env).astype(jnp.float32) + c
+                write(s.dst, env, c)
+            elif isinstance(s, EwiseTile):
+                if s.op == "ones":
+                    write(s.dst, env, jnp.ones(s.dst.tile, jnp.float32))
+                elif s.op == "copy1":
+                    src = read(s.srcs[0], env)
+                    write(s.dst, env, src.reshape(s.dst.tile))
+                else:
+                    srcs = [read(r, env) for r in s.srcs]
+                    if len(srcs) == 2 and srcs[1].ndim < srcs[0].ndim:
+                        srcs[1] = srcs[1][(None,) * (srcs[0].ndim
+                                                     - srcs[1].ndim)]
+                    write(s.dst, env, _EWISE_JNP[s.op](*srcs))
+            else:
+                raise TypeError(type(s))
+
+        def go(stmts: List[Stmt], env):
+            for s in stmts:
+                if isinstance(s, Loop):
+                    # Loop-var-dependent starts are traced; extents static.
+                    if (s.kind == LoopKind.SEQUENTIAL
+                            and s.var.extent > _FORI_THRESHOLD):
+                        touched = _buffers_written(s.body)
+
+                        def body_fn(t, carry):
+                            for name, arr in zip(touched, carry):
+                                mem[name] = arr
+                            go(s.body, {**env, s.var.name: t})
+                            return tuple(mem[n] for n in touched)
+
+                        init = tuple(mem[n] for n in touched)
+                        final = jax.lax.fori_loop(0, s.var.extent, body_fn, init)
+                        for name, arr in zip(touched, final):
+                            mem[name] = arr
+                    else:
+                        for t in range(s.var.extent):
+                            go(s.body, {**env, s.var.name: t})
+                else:
+                    exec_stmt(s, env)
+
+        go(kernel.body, {})
+        return [mem[b.name] for b in kernel.outputs]
+
+    fn.__name__ = f"stagecc_jax_{kernel.name}"
+    return fn
+
+
+def _buffers_written(stmts: Sequence[Stmt]) -> List[str]:
+    out: List[str] = []
+
+    def go(ss):
+        for s in ss:
+            if isinstance(s, Loop):
+                go(s.body)
+            elif isinstance(s, (ZeroTile, MatmulTile, EwiseTile)):
+                if s.dst.buffer.name not in out:
+                    out.append(s.dst.buffer.name)
+
+    go(stmts)
+    return out
+
+
+def emit_jit(kernel: Kernel) -> Callable[..., List[jax.Array]]:
+    return jax.jit(emit(kernel))

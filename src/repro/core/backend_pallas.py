@@ -1,0 +1,330 @@
+"""Pallas backend: emit a ``pl.pallas_call`` TPU kernel from scheduled LoopIR.
+
+This is the RTL-emission stage of the paper's pipeline (Calyx -> System
+Verilog): the scheduled LoopIR's GRID loops become the pallas grid, tile
+shapes become BlockSpecs (explicit VMEM tiling), and the statement body
+becomes the kernel body executed per grid step by the Mosaic "synthesis"
+layer.
+
+Like Calyx, the emitter accepts a *structured subset* of the IR — the
+shapes produced by ``lowering.py`` + ``schedule.py`` for contraction
+kernels:
+
+    Loop(g0 @grid) { Loop(g1 @grid) { [Loop(g2 @grid)]
+        [ZeroTile(acc)]
+        ( Loop(k @seq|@unrolled) { MatmulTile(acc, A, B) } | MatmulTile )
+        [EwiseTile epilogue ...]*
+        [EwiseTile copy -> HBM out]
+    }}}
+
+Two canonical layouts fall out of the schedules, mirroring the paper:
+
+  * ``(i, j)`` grid, K inside the block  — the *inner-flattened* analogue:
+    each grid step holds a full ``(tm, K)``/(``K, tn``) stripe in VMEM, so
+    VMEM consumption grows with K (Fig. 3(b): resources ∝ size);
+  * ``(i, j, k)`` grid                   — the *nested* analogue: one
+    ``(tm, tk)`` tile per step, one output tile time-multiplexed across
+    the k grid dimension (Fig. 3(a): constant resources, datapath reuse).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .loop_ir import (EwiseTile, Kernel, Loop, LoopKind, MatmulTile, MemSpace,
+                      Stmt, TileRef, ZeroTile)
+from .backend_jax import _EWISE_JNP, _JNP_DTYPE
+
+
+class EmitError(NotImplementedError):
+    """Raised when a kernel is outside the emitter's structured subset."""
+
+
+@dataclasses.dataclass
+class _Plan:
+    grid_vars: List[str]                 # outer -> inner
+    grid: Tuple[int, ...]
+    inner_body: List[Stmt]
+    k_loop: Optional[Loop]               # reduction loop inside block, if any
+    k_grid_var: Optional[str]            # reduction on the grid, if any
+    in_buffers: List[str]
+    out_buffer: str
+    block_specs: Dict[str, Tuple[Tuple[int, ...], Tuple[object, ...]]]
+    acc_name: Optional[str]
+    matmul: Optional[MatmulTile] = None
+
+
+def _analyze(kernel: Kernel) -> _Plan:
+    kernel.verify()
+    # 1. peel GRID loops
+    grid_vars: List[str] = []
+    grid: List[int] = []
+    stmts = kernel.body
+    if len(stmts) != 1 or not isinstance(stmts[0], Loop):
+        raise EmitError(f"{kernel.name}: body must be a single loop nest")
+    cur: Stmt = stmts[0]
+    while isinstance(cur, Loop) and cur.kind == LoopKind.GRID:
+        grid_vars.append(cur.var.name)
+        grid.append(cur.var.extent)
+        if len(cur.body) == 1 and isinstance(cur.body[0], Loop) \
+                and cur.body[0].kind == LoopKind.GRID:
+            cur = cur.body[0]
+        else:
+            inner = cur.body
+            break
+    else:
+        raise EmitError(f"{kernel.name}: no GRID loops — run a schedule first")
+
+    if not grid_vars:
+        raise EmitError(f"{kernel.name}: no GRID loops")
+
+    # 2. classify the inner statements
+    acc_name = None
+    k_loop = None
+    k_grid_var = None
+    matmul: Optional[MatmulTile] = None
+    epilogue: List[EwiseTile] = []
+    for s in inner:
+        if isinstance(s, ZeroTile):
+            if s.dst.buffer.space == MemSpace.VREG:
+                acc_name = s.dst.buffer.name
+            # Zero of the HBM out with a k grid var is implicit (pl.when)
+        elif isinstance(s, Loop):
+            if len(s.body) != 1 or not isinstance(s.body[0], MatmulTile):
+                raise EmitError(f"{kernel.name}: reduction loop body must be "
+                                f"a single MatmulTile")
+            if s.kind == LoopKind.GRID:
+                # reduction mapped onto the grid (time-multiplexed schedule):
+                # hoist it as the innermost grid dimension; accumulation
+                # becomes pl.when-guarded updates of the revisited out block.
+                grid_vars.append(s.var.name)
+                grid.append(s.var.extent)
+                k_grid_var = s.var.name
+                matmul = s.body[0]
+                continue
+            if k_loop is not None or s.kind not in (LoopKind.SEQUENTIAL,
+                                                    LoopKind.UNROLLED):
+                raise EmitError(f"{kernel.name}: unsupported inner loop {s.var}")
+            k_loop = s
+            matmul = s.body[0]
+        elif isinstance(s, MatmulTile):
+            matmul = s
+            kvars = [v for e in (*s.lhs.index, *s.rhs.index)
+                     for v, _ in e.coeffs if v in grid_vars[2:]]
+            if kvars:
+                k_grid_var = kvars[0]
+        elif isinstance(s, EwiseTile):
+            epilogue.append(s)
+        else:
+            raise EmitError(f"{kernel.name}: unsupported stmt {s}")
+    if matmul is None:
+        raise EmitError(f"{kernel.name}: no MatmulTile found")
+    # a 3-long grid means k lives on the grid
+    if len(grid_vars) == 3:
+        k_grid_var = grid_vars[2]
+
+    # HBM buffers *written* inside the block that are not the kernel
+    # output are SSA temporaries left by fusion; the emitter forwards
+    # their values through registers instead of materialising them
+    # (the codegen equivalent of Calyx wiring cells directly).
+    out_names_ = {b.name for b in kernel.outputs}
+    written = set()
+    for s in inner:
+        if isinstance(s, (ZeroTile, MatmulTile, EwiseTile)) \
+                and s.dst.buffer.space == MemSpace.HBM \
+                and s.dst.buffer.name not in out_names_:
+            written.add(s.dst.buffer.name)
+
+    # 3. build block specs for every HBM buffer touched
+    inner_vars = {} if k_loop is None else {k_loop.var.name: k_loop.var.extent}
+    specs: Dict[str, Tuple[Tuple[int, ...], Tuple[object, ...]]] = {}
+
+    def visit(ref: TileRef):
+        if ref.buffer.space != MemSpace.HBM or ref.buffer.name in written:
+            return
+        block: List[int] = []
+        imap: List[object] = []   # either a grid-var name or 0
+        for d, e in enumerate(ref.index):
+            t = ref.tile[d]
+            if not e.coeffs:
+                # constant index: block covers [const*t, const*t + t)
+                if e.const != 0:
+                    raise EmitError(f"{kernel.name}: non-zero const index")
+                block.append(t)
+                imap.append(0)
+            elif len(e.coeffs) == 1:
+                v, stride = e.coeffs[0]
+                if stride != 1:
+                    raise EmitError(f"{kernel.name}: strided index on {v}")
+                if v in grid_vars:
+                    block.append(t)
+                    imap.append(v)
+                elif v in inner_vars:
+                    block.append(t * inner_vars[v])
+                    imap.append(0)
+                else:
+                    raise EmitError(f"{kernel.name}: unbound index var {v}")
+            else:
+                raise EmitError(f"{kernel.name}: multi-var affine index "
+                                f"(apply split+grid only)")
+        prev = specs.get(ref.buffer.name)
+        spec = (tuple(block), tuple(imap))
+        if prev is not None and prev != spec:
+            raise EmitError(f"{kernel.name}: inconsistent refs to "
+                            f"{ref.buffer.name}: {prev} vs {spec}")
+        specs[ref.buffer.name] = spec
+
+    for s in inner:
+        if isinstance(s, Loop):
+            for b in s.body:
+                if isinstance(b, MatmulTile):
+                    visit(b.dst), visit(b.lhs), visit(b.rhs)
+        elif isinstance(s, ZeroTile):
+            visit(s.dst)
+        elif isinstance(s, MatmulTile):
+            visit(s.dst), visit(s.lhs), visit(s.rhs)
+        elif isinstance(s, EwiseTile):
+            visit(s.dst)
+            for r in s.srcs:
+                visit(r)
+
+    out_names = [b.name for b in kernel.outputs]
+    if len(out_names) != 1:
+        raise EmitError(f"{kernel.name}: exactly one output supported")
+    out = out_names[0]
+    ins = [b.name for b in kernel.params
+           if b.name in specs and b.name != out]
+    return _Plan(grid_vars=grid_vars, grid=tuple(grid), inner_body=inner,
+                 k_loop=k_loop, k_grid_var=k_grid_var, in_buffers=ins,
+                 out_buffer=out, block_specs=specs, acc_name=acc_name,
+                 matmul=matmul)
+
+
+def emit(kernel: Kernel, interpret: bool = True) -> Callable[..., jax.Array]:
+    """Emit ``f(*hbm_inputs) -> out`` as a pallas_call.
+
+    ``interpret=True`` (default here) runs the kernel body in the pallas
+    interpreter so it is exact on CPU; on real TPU pass ``interpret=False``
+    to lower through Mosaic.
+    """
+    plan = _analyze(kernel)
+    buffers = {b.name: b for b in kernel.params + kernel.scratch}
+    out_buf = buffers[plan.out_buffer]
+    out_dtype = _JNP_DTYPE[out_buf.type.dtype]
+    gpos = {v: i for i, v in enumerate(plan.grid_vars)}
+
+    def mk_index_map(imap):
+        def index_map(*gids):
+            return tuple(gids[gpos[v]] if isinstance(v, str) else 0
+                         for v in imap)
+        return index_map
+
+    in_specs = []
+    for name in plan.in_buffers:
+        block, imap = plan.block_specs[name]
+        in_specs.append(pl.BlockSpec(block, mk_index_map(imap)))
+    out_block, out_imap = plan.block_specs[plan.out_buffer]
+    out_spec = pl.BlockSpec(out_block, mk_index_map(out_imap))
+
+    mm = plan.matmul
+    tm, tk = mm.lhs.tile[-2:]
+    tn = mm.rhs.tile[-1]
+    lhs_name, rhs_name = mm.lhs.buffer.name, mm.rhs.buffer.name
+    k_on_grid = plan.k_grid_var is not None
+    k_extent = plan.k_loop.var.extent if plan.k_loop is not None else 1
+    k_unrolled = (plan.k_loop is not None
+                  and plan.k_loop.kind == LoopKind.UNROLLED)
+    # which dim of each operand block the k sub-tiling walks
+    epilogue = [s for s in plan.inner_body if isinstance(s, EwiseTile)]
+
+    def body(*refs):
+        ref_of = dict(zip(plan.in_buffers + [plan.out_buffer], refs))
+        a_ref, b_ref = ref_of[lhs_name], ref_of[rhs_name]
+        o_ref = ref_of[plan.out_buffer]
+
+        def dot_k(kk):
+            a = a_ref[..., :, pl.dslice(kk * tk, tk)] if k_extent > 1 else a_ref[...]
+            b = b_ref[pl.dslice(kk * tk, tk), :] if k_extent > 1 else b_ref[...]
+            return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+        if k_on_grid:
+            k_id = pl.program_id(gpos[plan.k_grid_var])
+
+            @pl.when(k_id == 0)
+            def _init():
+                o_ref[...] = jnp.zeros_like(o_ref)
+
+            o_ref[...] = o_ref[...] + dot_k(0).astype(out_dtype)
+            last = pl.num_programs(gpos[plan.k_grid_var]) - 1
+            if epilogue:
+                @pl.when(k_id == last)
+                def _epi():
+                    o_ref[...] = _apply_epilogue(
+                        epilogue, o_ref[...], ref_of, plan).astype(out_dtype)
+        else:
+            acc = jnp.zeros((tm, tn), jnp.float32)
+            if k_unrolled or k_extent <= 4:
+                for kk in range(k_extent):
+                    acc = acc + dot_k(kk)
+            else:
+                acc = jax.lax.fori_loop(
+                    0, k_extent, lambda kk, c: c + dot_k(kk), acc)
+            acc = _apply_epilogue(epilogue, acc, ref_of, plan)
+            o_ref[...] = acc.astype(out_dtype)
+
+    fname = f"stagecc_pallas_{kernel.name}"
+    call = pl.pallas_call(
+        body,
+        grid=plan.grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct(out_buf.shape, out_dtype),
+        interpret=interpret,
+    )
+
+    def fn(*inputs):
+        by_name = dict(zip(plan.in_buffers, inputs))
+        args = [jnp.asarray(by_name[n], _JNP_DTYPE[buffers[n].type.dtype])
+                for n in plan.in_buffers]
+        return call(*args)
+
+    fn.__name__ = fname
+    fn.plan = plan  # exposed for tests / resource introspection
+    return fn
+
+
+def _apply_epilogue(epilogue: Sequence[EwiseTile], acc, ref_of, plan: _Plan):
+    """Apply fused elementwise tail ops to the accumulator value.
+
+    HBM temporaries introduced by fusion are forwarded through a local
+    SSA environment (``local``) and never materialised.
+    """
+    local: Dict[str, object] = {}
+    if plan.acc_name is not None:
+        local[plan.acc_name] = acc
+    val = acc
+    for s in epilogue:
+        srcs = []
+        for r in s.srcs:
+            if r.buffer.name in local:
+                srcs.append(local[r.buffer.name])
+            elif r.buffer.name == plan.out_buffer:
+                srcs.append(val)
+            elif r.buffer.name in ref_of:
+                srcs.append(ref_of[r.buffer.name][...])
+            else:
+                raise EmitError(f"epilogue src {r.buffer.name} not mapped")
+        if len(srcs) == 2 and getattr(srcs[1], "ndim", 0) < srcs[0].ndim:
+            srcs[1] = srcs[1][(None,) * (srcs[0].ndim - srcs[1].ndim)]
+        v = srcs[0] if s.op == "copy" else _EWISE_JNP[s.op](*srcs)
+        local[s.dst.buffer.name] = v
+        val = v
+    if plan.out_buffer in local:
+        return local[plan.out_buffer]
+    return val

@@ -1,0 +1,111 @@
+"""Frontend tracer: restricted Python -> TensorIR.
+
+Plays the SYCL/DPC++ role in the paper's Fig. 1: the user writes a kernel
+in the host language (here: Python over ``stagecc`` proxy arrays) and the
+frontend produces the level-1 IR automatically — no hand-written IR.
+
+Example::
+
+    import repro.core.frontend as fe
+
+    def f(a, b, bias):
+        return fe.relu(fe.matmul(a, b) + bias)
+
+    graph = fe.trace(f, [fe.spec((64, 32)), fe.spec((32, 16)),
+                         fe.spec((16,))])
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Sequence
+
+from .tensor_ir import Graph, TensorType, Value
+
+
+@dataclasses.dataclass(frozen=True)
+class spec:
+    shape: tuple
+    dtype: str = "float32"
+
+
+class Tracer:
+    """Proxy value recording ops into the active graph."""
+
+    __slots__ = ("value", "graph")
+
+    def __init__(self, value: Value, graph: Graph):
+        self.value = value
+        self.graph = graph
+
+    def _emit(self, opname, others=(), **attrs):
+        ins = [self.value] + [o.value for o in others]
+        res = self.graph.emit(opname, ins, **attrs)
+        return Tracer(res, self.graph)
+
+    def __matmul__(self, other):
+        return self._emit("matmul", [other])
+
+    def __add__(self, other):
+        if other.value.type.rank == 1 and self.value.type.rank > 1:
+            return self._emit("bias_add", [other])
+        return self._emit("add", [other])
+
+    def __sub__(self, other):
+        return self._emit("sub", [other])
+
+    def __mul__(self, other):
+        return self._emit("mul", [other])
+
+    def __neg__(self):
+        return self._emit("neg")
+
+    @property
+    def shape(self):
+        return self.value.type.shape
+
+    @property
+    def dtype(self):
+        return self.value.type.dtype
+
+
+# free-function forms mirroring the op set
+def matmul(a: Tracer, b: Tracer) -> Tracer:
+    return a._emit("matmul", [b])
+
+
+def relu(a: Tracer) -> Tracer:
+    return a._emit("relu")
+
+
+def gelu(a: Tracer) -> Tracer:
+    return a._emit("gelu")
+
+
+def exp(a: Tracer) -> Tracer:
+    return a._emit("exp")
+
+
+def maximum(a: Tracer, b: Tracer) -> Tracer:
+    return a._emit("maximum", [b])
+
+
+def transpose(a: Tracer, perm) -> Tracer:
+    return a._emit("transpose", perm=tuple(perm))
+
+
+def cast(a: Tracer, dtype: str) -> Tracer:
+    return a._emit("cast", dtype=dtype)
+
+
+def trace(fn: Callable, in_specs: Sequence[spec], name: str = None) -> Graph:
+    g = Graph(name or fn.__name__)
+    tracers = []
+    for i, sp in enumerate(in_specs):
+        v = g.add_input(f"arg{i}", TensorType(tuple(sp.shape), sp.dtype))
+        tracers.append(Tracer(v, g))
+    out = fn(*tracers)
+    outs = out if isinstance(out, (tuple, list)) else [out]
+    g.set_outputs(*[t.value for t in outs])
+    g.verify()
+    return g

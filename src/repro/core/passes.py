@@ -1,0 +1,182 @@
+"""Pass manager + pipeline parser — the reusability/extensibility layer.
+
+The paper encapsulates its whole lowering flow "using a script"; here the
+script is a declarative pipeline string, e.g.::
+
+    lower{tile_m=128,tile_n=128,tile_k=128},flatten-inner,grid{vars=2},emit-pallas
+
+New passes register with ``@register_pass`` exactly like new ops register
+with ``register_op`` — third parties extend the pipeline without touching
+the core (the paper's stated goal for the infrastructure).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable, Dict, List, Optional, Union
+
+from . import backend_jax, backend_pallas, backend_ref, lowering, schedule
+from .loop_ir import Kernel, LoopKind, MemSpace
+from .tensor_ir import Graph
+
+Artifact = Union[Graph, Kernel, Callable]
+
+
+@dataclasses.dataclass(frozen=True)
+class PassDef:
+    name: str
+    level: str                       # "tensor" | "loop" | "backend"
+    fn: Callable[..., Artifact]
+    doc: str = ""
+
+
+PASS_REGISTRY: Dict[str, PassDef] = {}
+
+
+def register_pass(name: str, level: str, doc: str = ""):
+    def deco(fn):
+        if name in PASS_REGISTRY:
+            raise ValueError(f"pass {name!r} already registered")
+        PASS_REGISTRY[name] = PassDef(name, level, fn, doc)
+        return fn
+    return deco
+
+
+# ---- built-in passes --------------------------------------------------------
+
+
+@register_pass("lower", "tensor", "TensorIR -> LoopIR (nested sequential)")
+def _lower(g: Graph, tile_m: int = 1, tile_n: int = 1, tile_k: int = 1,
+           use_accumulator: int = 1) -> Kernel:
+    return lowering.lower_graph(g, lowering.LoweringOptions(
+        tile_m=tile_m, tile_n=tile_n, tile_k=tile_k,
+        use_accumulator=bool(use_accumulator)))
+
+
+@register_pass("flatten-inner", "loop", "paper's inner-loop flattening")
+def _flatten(k: Kernel) -> Kernel:
+    return schedule.flatten_inner(k)
+
+
+@register_pass("unroll", "loop", "unroll a named loop")
+def _unroll(k: Kernel, var: str) -> Kernel:
+    return schedule.unroll(k, var)
+
+
+@register_pass("vectorize", "loop", "map a named loop to VPU lanes")
+def _vectorize(k: Kernel, var: str) -> Kernel:
+    return schedule.vectorize(k, var)
+
+
+@register_pass("split", "loop", "split a named loop by a factor")
+def _split(k: Kernel, var: str, factor: int) -> Kernel:
+    return schedule.split(k, var, factor)
+
+
+@register_pass("interchange", "loop", "swap two perfectly nested loops")
+def _interchange(k: Kernel, outer: str, inner: str) -> Kernel:
+    return schedule.interchange(k, outer, inner)
+
+
+@register_pass("fuse-epilogue", "loop", "fuse elementwise tail into matmul nest")
+def _fuse(k: Kernel) -> Kernel:
+    return schedule.fuse_epilogue(k)
+
+
+@register_pass("grid", "loop", "map the outermost N loops to the pallas grid")
+def _grid(k: Kernel, vars: int = 2) -> Kernel:
+    count = 0
+    stmts = k.body
+    while count < vars and len(stmts) >= 1:
+        loops = [s for s in stmts if hasattr(s, "kind")]
+        if not loops:
+            break
+        loop = loops[0]
+        loop.kind = LoopKind.GRID
+        count += 1
+        stmts = loop.body
+    k.verify()
+    return k
+
+
+@register_pass("emit-ref", "backend", "emit numpy interpreter callable")
+def _emit_ref(k: Kernel):
+    return lambda *xs: backend_ref.run(k, xs)
+
+
+@register_pass("emit-jax", "backend", "emit jitted XLA callable")
+def _emit_jax(k: Kernel):
+    return backend_jax.emit_jit(k)
+
+
+@register_pass("emit-pallas", "backend", "emit pallas_call kernel")
+def _emit_pallas(k: Kernel, interpret: int = 1):
+    return backend_pallas.emit(k, interpret=bool(interpret))
+
+
+# ---- pipeline parsing ---------------------------------------------------------
+
+_STAGE_RE = re.compile(r"^([a-zA-Z_][\w\-]*)(?:\{(.*)\})?$")
+
+
+def parse_pipeline(spec: str) -> List[Dict[str, Any]]:
+    """``"lower{tile_m=128},flatten-inner"`` -> [{name, kwargs}, ...]."""
+    stages = []
+    depth = 0
+    token = ""
+    parts: List[str] = []
+    for ch in spec:
+        if ch == "{":
+            depth += 1
+        elif ch == "}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append(token)
+            token = ""
+        else:
+            token += ch
+    if token.strip():
+        parts.append(token)
+    for part in parts:
+        m = _STAGE_RE.match(part.strip())
+        if not m:
+            raise ValueError(f"bad pipeline stage {part!r}")
+        name, argstr = m.group(1), m.group(2)
+        kwargs: Dict[str, Any] = {}
+        if argstr:
+            for kv in argstr.split(","):
+                key, _, val = kv.partition("=")
+                key, val = key.strip(), val.strip()
+                kwargs[key] = int(val) if re.fullmatch(r"-?\d+", val) else val
+        stages.append({"name": name, "kwargs": kwargs})
+    return stages
+
+
+@dataclasses.dataclass
+class PipelineResult:
+    artifact: Artifact
+    trace: List[str]               # pass-by-pass textual IR dumps
+
+
+def run_pipeline(graph: Graph, spec: str, dump: bool = False) -> PipelineResult:
+    """The paper's "script": run a declared pass pipeline end to end with
+    verification between stages."""
+    stages = parse_pipeline(spec)
+    art: Artifact = graph
+    trace: List[str] = []
+    if dump:
+        trace.append(f"== input ==\n{graph}")
+    for st in stages:
+        pd = PASS_REGISTRY.get(st["name"])
+        if pd is None:
+            raise KeyError(f"unknown pass {st['name']!r}; "
+                           f"registered: {sorted(PASS_REGISTRY)}")
+        art = pd.fn(art, **st["kwargs"])
+        if isinstance(art, (Graph, Kernel)):
+            art.verify()
+            if dump:
+                trace.append(f"== after {st['name']} ==\n{art}")
+        elif dump:
+            trace.append(f"== after {st['name']} == <{pd.level} artifact>")
+    return PipelineResult(art, trace)

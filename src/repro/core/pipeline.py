@@ -1,0 +1,129 @@
+"""End-to-end compile driver — the paper's "encapsulation script".
+
+``compile_gemm`` / ``compile_traced`` run the full Fig.-1 flow:
+
+    python fn  --frontend-->  TensorIR  --lower-->  LoopIR
+        --schedule passes-->  scheduled LoopIR
+        --backend-->          {numpy oracle | jitted XLA | pallas kernel}
+        --models-->           cycles (TABLE I) + resources (Fig. 3)
+
+and return everything a caller (tests, benchmarks, the integration layer)
+needs in one artifact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+from . import backend_jax, backend_pallas, backend_ref, machine_model
+from .frontend import spec, trace
+from .lowering import LoweringOptions, lower_graph
+from .machine_model import TPU_V5E, CycleReport, MachineModel, ResourceReport
+from .passes import run_pipeline
+from .tensor_ir import Graph
+
+
+SCHEDULES = ("nested", "inner_flattened", "tpu_mxu", "tpu_mxu_kgrid")
+
+
+@dataclasses.dataclass
+class CompiledKernel:
+    name: str
+    graph: Graph
+    kernel: "Kernel"                  # scheduled LoopIR
+    schedule: str
+    cycles: CycleReport
+    resources: ResourceReport
+    flops: int
+    hbm_bytes: int
+    run_ref: Callable                  # numpy oracle
+    run_jax: Optional[Callable]        # jitted XLA
+    run_pallas: Optional[Callable]     # pallas_call (interpret on CPU)
+
+    def summary(self) -> str:
+        return (f"{self.name}[{self.schedule}]: {self.cycles}, "
+                f"{self.resources}, flops={self.flops:,}, "
+                f"hbm={self.hbm_bytes:,}B")
+
+
+def _pipeline_for(schedule: str, tile: Dict[str, int]) -> str:
+    t = f"tile_m={tile['m']},tile_n={tile['n']},tile_k={tile['k']}"
+    if schedule == "nested":
+        return f"lower{{{t}}}"
+    if schedule == "inner_flattened":
+        return f"lower{{{t}}},flatten-inner"
+    if schedule == "tpu_mxu":
+        # (i, j) grid, K inside the block — flattened analogue
+        return f"lower{{{t}}},fuse-epilogue,grid{{vars=2}}"
+    if schedule == "tpu_mxu_kgrid":
+        # (i, j, k) grid — time-multiplexed analogue
+        return f"lower{{{t}}},fuse-epilogue,grid{{vars=3}}"
+    raise ValueError(f"unknown schedule {schedule!r}; choose from {SCHEDULES}")
+
+
+def compile_traced(fn_or_graph, in_specs: Optional[Sequence[spec]] = None,
+                   schedule: str = "tpu_mxu",
+                   tile: Optional[Dict[str, int]] = None,
+                   machine: MachineModel = TPU_V5E,
+                   want_jax: bool = True,
+                   want_pallas: bool = True,
+                   interpret: bool = True) -> CompiledKernel:
+    if isinstance(fn_or_graph, Graph):
+        graph = fn_or_graph
+    else:
+        graph = trace(fn_or_graph, in_specs)
+    tile = tile or ({"m": 1, "n": 1, "k": 1}
+                    if schedule in ("nested", "inner_flattened")
+                    else {"m": 128, "n": 128, "k": 128})
+    # clamp tiles to the actual problem inside lowering
+    pipe = _pipeline_for(schedule, tile)
+    kernel = run_pipeline(graph, pipe).artifact
+    cyc = machine_model.cycles(kernel, machine)
+    res = machine_model.resources(kernel, machine)
+    run_ref = lambda *xs: backend_ref.run(kernel, xs)
+    run_jax = backend_jax.emit_jit(kernel) if want_jax else None
+    run_pal = None
+    if want_pallas and schedule in ("tpu_mxu", "tpu_mxu_kgrid"):
+        try:
+            run_pal = backend_pallas.emit(kernel, interpret=interpret)
+        except backend_pallas.EmitError:
+            run_pal = None
+    return CompiledKernel(
+        name=graph.name, graph=graph, kernel=kernel, schedule=schedule,
+        cycles=cyc, resources=res, flops=machine_model.flops(kernel),
+        hbm_bytes=machine_model.hbm_bytes(kernel),
+        run_ref=run_ref, run_jax=run_jax, run_pallas=run_pal)
+
+
+def compile_gemm(m: int, n: int, k: int, schedule: str = "tpu_mxu",
+                 dtype: str = "float32", epilogue: str = "none",
+                 tile: Optional[Dict[str, int]] = None,
+                 machine: MachineModel = TPU_V5E,
+                 interpret: bool = True,
+                 want_jax: bool = True,
+                 want_pallas: bool = True) -> CompiledKernel:
+    """The paper's GEMM case study, parameterised by schedule/epilogue."""
+    from . import frontend as fe
+
+    if epilogue == "none":
+        def f(a, b):
+            return fe.matmul(a, b)
+        specs = [spec((m, k), dtype), spec((k, n), dtype)]
+    elif epilogue == "bias_relu":
+        def f(a, b, bias):
+            return fe.relu(fe.matmul(a, b) + bias)
+        specs = [spec((m, k), dtype), spec((k, n), dtype), spec((n,), "float32")]
+    elif epilogue == "relu":
+        def f(a, b):
+            return fe.relu(fe.matmul(a, b))
+        specs = [spec((m, k), dtype), spec((k, n), dtype)]
+    else:
+        raise ValueError(f"unknown epilogue {epilogue!r}")
+    g = trace(f, specs, name=f"gemm_{m}x{n}x{k}_{epilogue}")
+    return compile_traced(g, schedule=schedule, tile=tile, machine=machine,
+                          interpret=interpret, want_jax=want_jax,
+                          want_pallas=want_pallas)
+
+
+from .loop_ir import Kernel  # noqa: E402

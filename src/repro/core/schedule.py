@@ -1,0 +1,319 @@
+"""Scheduling passes on LoopIR — the paper's optimization layer.
+
+The paper's single studied transformation is *inner-for-loop flattening*
+(unrolling the innermost loop so the datapath is replicated spatially
+instead of time-multiplexed).  ``flatten_inner`` below is exactly that
+pass.  Around it we provide the passes a reusable scheduling layer needs
+on TPU: loop splitting, interchange, grid-parallelisation (pallas grid),
+vectorisation, and memory-space placement.
+
+All passes are destructive on the Kernel (cheap dataclasses) and re-verify
+afterwards, mirroring MLIR's pass + verifier discipline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from .loop_ir import (AffineExpr, Buffer, EwiseTile, Kernel, Loop, LoopKind,
+                      LoopVar, MatmulTile, MemSpace, Stmt, TileRef, ZeroTile,
+                      _stmt_refs)
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+
+
+def _parent_and_list(kernel: Kernel, var: str) -> Tuple[List[Stmt], int, Loop]:
+    """Locate the Loop with variable ``var`` and the list containing it."""
+
+    def go(stmts: List[Stmt]):
+        for idx, s in enumerate(stmts):
+            if isinstance(s, Loop):
+                if s.var.name == var:
+                    return stmts, idx, s
+                found = go(s.body)
+                if found:
+                    return found
+        return None
+
+    found = go(kernel.body)
+    if not found:
+        raise KeyError(f"loop {var!r} not found in kernel {kernel.name}")
+    return found
+
+
+def _rewrite_refs(stmts: List[Stmt], fn) -> None:
+    for s in stmts:
+        if isinstance(s, Loop):
+            _rewrite_refs(s.body, fn)
+        elif isinstance(s, ZeroTile):
+            s.dst = fn(s.dst)
+        elif isinstance(s, MatmulTile):
+            s.dst, s.lhs, s.rhs = fn(s.dst), fn(s.lhs), fn(s.rhs)
+        elif isinstance(s, EwiseTile):
+            s.dst = fn(s.dst)
+            s.srcs = [fn(r) for r in s.srcs]
+
+
+# --------------------------------------------------------------------------
+# passes
+# --------------------------------------------------------------------------
+
+
+def unroll(kernel: Kernel, var: str) -> Kernel:
+    """Mark loop ``var`` UNROLLED: spatial replication of its datapath."""
+    _, _, loop = _parent_and_list(kernel, var)
+    loop.kind = LoopKind.UNROLLED
+    kernel.verify()
+    return kernel
+
+
+def vectorize(kernel: Kernel, var: str) -> Kernel:
+    _, _, loop = _parent_and_list(kernel, var)
+    loop.kind = LoopKind.VECTOR
+    kernel.verify()
+    return kernel
+
+
+def parallelize(kernel: Kernel, var: str) -> Kernel:
+    """Map loop ``var`` to the pallas grid (must be loop-carried-free)."""
+    _, _, loop = _parent_and_list(kernel, var)
+    loop.kind = LoopKind.GRID
+    kernel.verify()
+    return kernel
+
+
+def flatten_inner(kernel: Kernel) -> Kernel:
+    """The paper's transformation: fully unroll the innermost loop of the
+    deepest nest (TABLE I: "Inner Flattened for-loop")."""
+    deepest: Optional[Loop] = None
+    depth_of = -1
+    for s, depth, _ in kernel.walk():
+        if isinstance(s, Loop) and not any(isinstance(b, Loop) for b in s.body):
+            if depth > depth_of:
+                depth_of, deepest = depth, s
+    if deepest is None:
+        raise ValueError(f"kernel {kernel.name} has no innermost loop")
+    deepest.kind = LoopKind.UNROLLED
+    kernel.verify()
+    return kernel
+
+
+def interchange(kernel: Kernel, outer: str, inner: str) -> Kernel:
+    """Swap two perfectly-nested loops."""
+    _, _, lo = _parent_and_list(kernel, outer)
+    if not (len(lo.body) == 1 and isinstance(lo.body[0], Loop)
+            and lo.body[0].var.name == inner):
+        raise ValueError(f"{outer} and {inner} are not perfectly nested")
+    li = lo.body[0]
+    lo.var, li.var = li.var, lo.var
+    lo.kind, li.kind = li.kind, lo.kind
+    kernel.verify()
+    return kernel
+
+
+def split(kernel: Kernel, var: str, factor: int) -> Kernel:
+    """var(E) -> var_o(E/factor) x var_i(factor); rewrites affine indices."""
+    _, _, loop = _parent_and_list(kernel, var)
+    E = loop.var.extent
+    if E % factor:
+        raise ValueError(f"split: {factor} does not divide extent {E} of {var}")
+    vo = LoopVar(var + "_o", E // factor)
+    vi = LoopVar(var + "_i", factor)
+
+    def rw(ref: TileRef) -> TileRef:
+        new_idx = []
+        for e in ref.index:
+            coeffs = []
+            for v, s in e.coeffs:
+                if v == var:
+                    coeffs.append((vo.name, s * factor))
+                    coeffs.append((vi.name, s))
+                else:
+                    coeffs.append((v, s))
+            new_idx.append(AffineExpr(tuple(coeffs), e.const))
+        return TileRef(ref.buffer, tuple(new_idx), ref.tile)
+
+    _rewrite_refs(loop.body, rw)
+    inner_loop = Loop(vi, loop.kind, loop.body)
+    loop.var = vo
+    loop.body = [inner_loop]
+    kernel.verify()
+    return kernel
+
+
+def set_space(kernel: Kernel, buffer_name: str, space: MemSpace) -> Kernel:
+    """Move a scratch buffer between VMEM and VREG (HBM params are fixed)."""
+    for i, b in enumerate(kernel.scratch):
+        if b.name == buffer_name:
+            nb = Buffer(b.name, b.type, space)
+            kernel.scratch[i] = nb
+
+            def rw(ref: TileRef) -> TileRef:
+                if ref.buffer.name == buffer_name:
+                    return TileRef(nb, ref.index, ref.tile)
+                return ref
+
+            _rewrite_refs(kernel.body, rw)
+            kernel.verify()
+            return kernel
+    raise KeyError(f"scratch buffer {buffer_name!r} not found")
+
+
+def fuse_epilogue(kernel: Kernel) -> Kernel:
+    """Fuse a following elementwise loop nest that consumes a matmul's
+    output tile-for-tile into the matmul nest (removes an HBM round-trip).
+
+    Handles the canonical ``matmul -> ewise(C, ...)`` chain produced by
+    ``lowering.py`` when both nests walk the same tile grid.  This is the
+    TPU equivalent of keeping the epilogue on the accelerator fabric
+    instead of bouncing through the AXI bus.
+    """
+    body = kernel.body
+    fused = True
+    while fused:
+        fused = False
+        for i in range(len(body) - 1):
+            a, b = body[i], body[i + 1]
+            if not (isinstance(a, Loop) and isinstance(b, Loop)):
+                continue
+            prods = _stored_hbm_buffers(a)
+            if not prods:
+                continue
+            cons_srcs = _loopnest_leaf(b)
+            if cons_srcs is None:
+                continue
+            leaf_stmts, b_vars = cons_srcs
+            if len(leaf_stmts) != 1 or not isinstance(leaf_stmts[0], EwiseTile):
+                continue
+            ew = leaf_stmts[0]
+            hits = [p for p in prods if any(r.buffer.name == p for r in ew.srcs)]
+            if not hits:
+                continue
+            prod = hits[0]
+            a_vars = _nest_vars(a)
+            if len(a_vars) < len(b_vars):
+                continue
+            # the consumer must walk the *same tile grid* as the producer's
+            # outer loops: equal extents, and its refs use matching tiles.
+            if any(av.extent != bv.extent
+                   for av, bv in zip(a_vars, b_vars)):
+                continue
+            prod_tile = _store_tile(a, prod)
+            if prod_tile is not None and ew.dst.tile[-len(prod_tile):] != prod_tile:
+                continue
+            # substitute the consumer's loop vars by the producer's outer vars
+            mapping = dict(zip([v.name for v in b_vars], [v.name for v in a_vars]))
+
+            def rw(ref: TileRef) -> TileRef:
+                idx = tuple(AffineExpr(tuple((mapping.get(v, v), s)
+                                             for v, s in e.coeffs), e.const)
+                            for e in ref.index)
+                return TileRef(ref.buffer, idx, ref.tile)
+
+            new_leaf = EwiseTile(ew.op, rw(ew.dst), [rw(r) for r in ew.srcs])
+            _append_to_innermost(a, new_leaf, depth=len(b_vars))
+            del body[i + 1]
+            fused = True
+            break
+    kernel.verify()
+    return kernel
+
+
+def _store_tile(loop: Loop, buffer_name: str) -> Optional[Tuple[int, ...]]:
+    """Tile shape with which ``buffer_name`` is stored inside the nest."""
+    found: List[Tuple[int, ...]] = []
+
+    def go(stmts):
+        for s in stmts:
+            if isinstance(s, Loop):
+                go(s.body)
+            elif isinstance(s, (EwiseTile, MatmulTile, ZeroTile)):
+                if s.dst.buffer.name == buffer_name:
+                    found.append(s.dst.tile)
+
+    go([loop])
+    return found[0] if found else None
+
+
+def _stored_hbm_buffers(loop: Loop) -> List[str]:
+    stores: List[str] = []
+    def go(stmts):
+        for s in stmts:
+            if isinstance(s, Loop):
+                go(s.body)
+            elif isinstance(s, (EwiseTile, MatmulTile, ZeroTile)):
+                dst = s.dst
+                if dst.buffer.space == MemSpace.HBM and dst.buffer.name not in stores:
+                    stores.append(dst.buffer.name)
+    go([loop])
+    return stores
+
+
+def _loopnest_leaf(loop: Loop):
+    vars_ = []
+    cur: Stmt = loop
+    while isinstance(cur, Loop):
+        vars_.append(cur.var)
+        if len(cur.body) != 1:
+            return None
+        cur = cur.body[0]
+    return [cur], vars_
+
+
+def _nest_vars(loop: Loop) -> List[LoopVar]:
+    vars_ = []
+    cur: Stmt = loop
+    while isinstance(cur, Loop):
+        vars_.append(cur.var)
+        nested = [s for s in cur.body if isinstance(s, Loop)]
+        if len(nested) != 1:
+            break
+        cur = nested[0]
+    return vars_
+
+
+def _append_to_innermost(loop: Loop, stmt: Stmt, depth: int) -> None:
+    cur = loop
+    d = 1
+    while d < depth:
+        nxt = [s for s in cur.body if isinstance(s, Loop)]
+        if not nxt:
+            break
+        cur = nxt[0]
+        d += 1
+    cur.body.append(stmt)
+
+
+# --------------------------------------------------------------------------
+# canned schedules for the GEMM case study
+# --------------------------------------------------------------------------
+
+
+def schedule_nested(kernel: Kernel) -> Kernel:
+    """Paper baseline: leave every loop SEQUENTIAL (time-multiplexed)."""
+    return kernel
+
+
+def schedule_inner_flattened(kernel: Kernel) -> Kernel:
+    """Paper optimisation: flatten (fully unroll) the innermost loop."""
+    return flatten_inner(kernel)
+
+
+def schedule_tpu_mxu(kernel: Kernel) -> Kernel:
+    """Beyond-paper TPU-native schedule: outer tiles on the pallas grid,
+    K-accumulation sequential in VREG (time-multiplexing the MXU — the
+    *good* kind of datapath reuse)."""
+    loops = kernel.loops()
+    # lowering emits i, j, k nests per matmul; grid-map the first two levels
+    tops = [s for s in kernel.body if isinstance(s, Loop)]
+    for top in tops:
+        top.kind = LoopKind.GRID
+        inner = [s for s in top.body if isinstance(s, Loop)]
+        if inner:
+            inner[0].kind = LoopKind.GRID
+    kernel.verify()
+    return kernel

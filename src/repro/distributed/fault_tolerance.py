@@ -1,0 +1,83 @@
+"""Failure-domain handling beyond checkpoint/restart.
+
+``FailoverRunner`` wraps a train-step callable with restore-on-failure
+semantics: any step that raises a recoverable error (device OOM, a
+simulated chip loss, a collective timeout surfaced as RuntimeError) rolls
+the state back to the last committed checkpoint and replays from there —
+the in-process equivalent of a job restart, with the same guarantees
+(stateless data pipeline keyed by step => no sample skew).
+
+On a real fleet this sits under a cluster scheduler that also replaces
+the failed host; the state machine here (checkpoint -> fail -> restore ->
+replay) is identical, which is what the tests exercise by injection.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+
+from repro.checkpoint import checkpointer as ckpt
+
+RECOVERABLE = (RuntimeError, ValueError, jax.errors.JaxRuntimeError)
+
+
+@dataclasses.dataclass
+class FailoverConfig:
+    checkpoint_dir: str
+    checkpoint_every: int = 50
+    max_failures: int = 5
+    backoff_s: float = 0.0           # real fleets back off; tests don't
+
+
+class FailoverRunner:
+    def __init__(self, cfg: FailoverConfig, train_step: Callable,
+                 batch_fn: Callable[[int], Dict],
+                 log_fn: Callable[[str], None] = print):
+        self.cfg = cfg
+        self.train_step = train_step
+        self.batch_fn = batch_fn
+        self.log = log_fn
+        self.failures = 0
+        self.replayed_steps = 0
+
+    def run(self, state, start_step: int, total_steps: int):
+        step = start_step
+        last_commit = start_step
+        # resume if a previous incarnation left a checkpoint
+        latest = ckpt.latest_step(self.cfg.checkpoint_dir)
+        if latest is not None and latest > step:
+            state, extra = ckpt.restore(self.cfg.checkpoint_dir,
+                                        target=state)
+            step = last_commit = extra["step"]
+            self.log(f"[failover] resumed at step {step}")
+        while step < total_steps:
+            try:
+                state, metrics = self.train_step(state, self.batch_fn(step))
+                jax.block_until_ready(jax.tree.leaves(metrics)[0])
+                step += 1
+                if step % self.cfg.checkpoint_every == 0 or \
+                        step == total_steps:
+                    ckpt.save(self.cfg.checkpoint_dir, step, state)
+                    last_commit = step
+            except RECOVERABLE as e:
+                self.failures += 1
+                if self.failures > self.cfg.max_failures:
+                    raise RuntimeError(
+                        f"exceeded {self.cfg.max_failures} failures") from e
+                self.log(f"[failover] step {step} failed ({type(e).__name__}:"
+                         f" {e}); restoring step {last_commit}")
+                if self.cfg.backoff_s:
+                    time.sleep(self.cfg.backoff_s)
+                if ckpt.latest_step(self.cfg.checkpoint_dir) is not None:
+                    state, extra = ckpt.restore(self.cfg.checkpoint_dir,
+                                                target=state)
+                    self.replayed_steps += step - extra["step"]
+                    step = extra["step"]
+                else:
+                    self.replayed_steps += step - start_step
+                    step = start_step
+        return state, step

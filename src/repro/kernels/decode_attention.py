@@ -1,0 +1,110 @@
+"""Single-token (decode) attention over a partially-filled KV cache.
+
+The serving hot spot: one query token per sequence attends a (Smax)-deep
+cache of which only ``valid`` entries are live.  Blocked over the cache
+with online softmax; GQA query groups ride along the sublane dimension
+so the (rep x hd) tile feeds the MXU per KV block.
+
+Layout: q (B, KV, rep, hd); k/v (B, KV, Smax, hd) — cache pre-transposed
+to head-major, which is also the HBM-friendly layout for decode (each
+(b, g) stream is contiguous).  ``valid`` (B,) int32.
+Grid = (B, KV, nkv); statistics in VMEM scratch across the kv dimension.
+Validated in interpret mode against the pure-jnp oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    _VMEM = None
+
+_NEG = -1e30
+
+
+def _kernel(valid_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, block_k: int):
+    ikv = pl.program_id(2)
+    nkv = pl.num_programs(2)
+
+    @pl.when(ikv == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale       # (rep, hd)
+    k = k_ref[0, 0].astype(jnp.float32)               # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (rep, bk)
+
+    valid = valid_ref[0]
+    kpos = ikv * block_k + jax.lax.iota(jnp.int32, block_k)[None, :]
+    s = jnp.where(kpos < valid, s, _NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ikv == nkv - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     valid: jax.Array, *, block_k: int = 256,
+                     interpret: bool = True) -> jax.Array:
+    """q: (B, KV, rep, hd); k/v: (B, KV, Smax, hd); valid: (B,) int32.
+    Returns (B, KV, rep, hd)."""
+    B, KV, rep, hd = q.shape
+    Smax = k.shape[2]
+    block_k = min(block_k, Smax)
+    if Smax % block_k:
+        raise ValueError(f"Smax={Smax} % block_k={block_k}")
+    scale = float(1.0 / np.sqrt(hd))
+    grid = (B, KV, Smax // block_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, g, i: (b,)),
+            pl.BlockSpec((1, 1, rep, hd), lambda b, g, i: (b, g, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, g, i: (b, g, i, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, g, i: (b, g, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, hd), lambda b, g, i: (b, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, rep, hd), q.dtype),
+        scratch_shapes=[_VMEM((rep, hd), jnp.float32),
+                        _VMEM((rep, 1), jnp.float32),
+                        _VMEM((rep, 1), jnp.float32)],
+        interpret=interpret,
+    )(valid.astype(jnp.int32), q, k, v)
+
+
+def decode_attention_ref(q, k, v, valid):
+    """Oracle: per-(b, kv-group) masked softmax attention."""
+    B, KV, rep, hd = q.shape
+    Smax = k.shape[2]
+    scale = 1.0 / np.sqrt(hd)
+    s = jnp.einsum("bgrh,bgsh->bgrs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    kpos = jnp.arange(Smax)[None, None, None, :]
+    s = jnp.where(kpos < valid[:, None, None, None], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bgrs,bgsh->bgrh", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

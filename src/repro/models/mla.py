@@ -1,0 +1,123 @@
+"""Multi-head Latent Attention (deepseek-v2).
+
+The KV cache stores only the compressed latent ``c_kv`` (kv_lora wide)
+plus the shared rope key — MLA's memory contribution.  This is the
+*faithful* (non-absorbed) formulation: per-head K/V are reconstructed
+from the latent at attention time.  The absorbed-matmul variant (folding
+W_uk into the query projection) is a recorded beyond-paper optimisation
+in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.layers import (Maker, Params, attention_core, rmsnorm,
+                                 rope)
+
+# §Perf B1 knob: absorbed (latent-MQA) attention for cached paths.
+# True is the optimised default; False forces the baseline
+# reconstruct-then-attend form (kept for A/B roofline measurement).
+_ABSORBED = True
+
+
+def set_mla_absorbed(on: bool) -> None:
+    global _ABSORBED
+    _ABSORBED = bool(on)
+
+
+def init_mla(cfg, mk: Maker) -> Params:
+    d = cfg.d_model
+    a = cfg.mla
+    H = cfg.num_heads
+    qd = a.qk_nope_dim + a.qk_rope_dim
+    return {
+        "norm": mk((d,), "embed", init="zeros"),
+        "wq": mk((d, H * qd), "fsdp heads"),
+        "w_dkv": mk((d, a.kv_lora + a.qk_rope_dim), "fsdp embed"),
+        "kv_norm": mk((a.kv_lora,), "embed", init="zeros"),
+        "w_ukv": mk((a.kv_lora, H * (a.qk_nope_dim + a.v_dim)), "fsdp heads"),
+        "wo": mk((H * a.v_dim, d), "heads fsdp"),
+    }
+
+
+def apply_mla(p: Params, x: jax.Array, cfg, positions: jax.Array,
+              cache: Optional[Params] = None,
+              kv_len: Optional[jax.Array] = None
+              ) -> Tuple[jax.Array, Optional[Params]]:
+    B, S, d = x.shape
+    a = cfg.mla
+    H = cfg.num_heads
+    nope, rdim, vdim = a.qk_nope_dim, a.qk_rope_dim, a.v_dim
+
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dq->bsq", h, p["wq"]).reshape(B, S, H, nope + rdim)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    dkv = jnp.einsum("bsd,dq->bsq", h, p["w_dkv"])
+    c_kv = rmsnorm(dkv[..., :a.kv_lora], p["kv_norm"], cfg.norm_eps)
+    k_rope = rope(dkv[..., None, a.kv_lora:], positions, cfg.rope_theta)[:, :, 0]
+
+    new_cache = None
+    if cache is not None:
+        start = kv_len if kv_len is not None else jnp.int32(0)
+        cc = jax.lax.dynamic_update_slice(
+            cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, start, 0))
+        cr = jax.lax.dynamic_update_slice(
+            cache["kr"], k_rope.astype(cache["kr"].dtype), (0, start, 0))
+        new_cache = {"ckv": cc, "kr": cr}
+        c_kv, k_rope = cc, cr
+        kpos = jnp.arange(c_kv.shape[1])[None, :]
+        valid = start + S
+    else:
+        kpos = positions
+        valid = None
+
+    Sk = c_kv.shape[1]
+    if cache is not None and _ABSORBED:
+        # ---- absorbed MLA (§Perf iteration B1): attend in latent space.
+        # Folding W_uk into the query turns MLA into MQA with kv_heads=1,
+        # head_dim = kv_lora + qk_rope, v_dim = kv_lora — no per-head K/V
+        # is ever reconstructed from the 32k-deep cache (the baseline
+        # materialised (B, Sk, H, nope+v) per layer per step).
+        w_ukv = p["w_ukv"].reshape(a.kv_lora, H, nope + vdim)
+        w_uk = w_ukv[..., :nope]                        # (lora, H, nope)
+        w_uv = w_ukv[..., nope:]                        # (lora, H, v)
+        q_lat = jnp.einsum("bshn,lhn->bshl", q_nope, w_uk)
+        qq = jnp.concatenate([q_lat, q_rope], axis=-1)  # (B,S,H,lora+rope)
+        k_eff = jnp.concatenate([c_kv, k_rope], axis=-1)[:, :, None, :]
+        v_eff = c_kv[:, :, None, :]                     # (B,Sk,1,lora)
+        qq = shard(qq, "batch", None, "heads", None)
+        # logits are identical to the non-absorbed form by associativity,
+        # so the softmax scale must stay 1/sqrt(nope+rope), NOT the latent
+        # width
+        ctx = attention_core(qq, k_eff, v_eff, positions,
+                             jnp.broadcast_to(kpos, (B, Sk)),
+                             None if valid is None else jnp.asarray(valid),
+                             causal=True, window=None,
+                             scale=1.0 / float((nope + rdim) ** 0.5))
+        out = jnp.einsum("bshl,lhv->bshv", ctx, w_uv)
+    else:
+        # non-absorbed (training): reconstruct per-head K/V once — cheaper
+        # in FLOPs when the whole sequence attends anyway.
+        kv = jnp.einsum("bsl,lq->bsq", c_kv, p["w_ukv"]).reshape(
+            B, Sk, H, nope + vdim)
+        k_nope, v = kv[..., :nope], kv[..., nope:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (B, Sk, H, rdim))], axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        qq = shard(qq, "batch", None, "heads", None)
+        k = shard(k, "batch", None, "heads", None)
+        v = shard(v, "batch", None, "heads", None)
+        out = attention_core(qq, k, v, positions,
+                             jnp.broadcast_to(kpos, (B, Sk)),
+                             None if valid is None else jnp.asarray(valid),
+                             causal=True, window=None)
+    out = jnp.einsum("bshv,hvd->bsd", out, p["wo"].reshape(H, vdim, d))
+    return x + shard(out, "batch", None, None), new_cache

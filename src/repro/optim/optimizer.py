@@ -1,0 +1,136 @@
+"""Optimizers built from scratch in JAX: AdamW and a factored variant.
+
+``factored=True`` replaces the full second moment of every rank>=2
+parameter with row/column statistics (Adafactor-style) — this is what
+makes optimizer state for the 1T-param kimi-k2 config fit the v5e HBM
+budget (see EXPERIMENTS.md §Dry-run memory table).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Params
+    v: Params                 # full v, or {"row": ..., "col": ...} if factored
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Params], OptState]
+    update: Callable[[Params, OptState, Params], Tuple[Params, OptState,
+                                                       Dict[str, jax.Array]]]
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), norm
+
+
+def _is_factorable(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= 8 and shape[-2] >= 8
+
+
+def adamw(lr_fn: Callable[[jax.Array], jax.Array], *, b1: float = 0.9,
+          b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.1,
+          clip_norm: Optional[float] = 1.0, factored: bool = False,
+          state_dtype=jnp.float32) -> Optimizer:
+
+    def init(params: Params) -> OptState:
+        m = jax.tree.map(lambda p: jnp.zeros(p.shape, state_dtype), params)
+        if factored:
+            def vinit(p):
+                if _is_factorable(p.shape):
+                    return {"row": jnp.zeros(p.shape[:-1], state_dtype),
+                            "col": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                             state_dtype)}
+                return {"full": jnp.zeros(p.shape, state_dtype)}
+            v = jax.tree.map(vinit, params)
+        else:
+            v = jax.tree.map(lambda p: jnp.zeros(p.shape, state_dtype), params)
+        return OptState(step=jnp.zeros((), jnp.int32), m=m, v=v)
+
+    def update(grads: Params, state: OptState, params: Params):
+        metrics: Dict[str, jax.Array] = {}
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+            metrics["grad_norm"] = gnorm
+        step = state.step + 1
+        lr = lr_fn(step)
+        metrics["lr"] = lr
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        new_m = jax.tree.map(
+            lambda m, g: (b1 * m + (1 - b1) * g.astype(state_dtype)),
+            state.m, grads)
+
+        if factored:
+            def vupd(v, g):
+                g2 = jnp.square(g.astype(jnp.float32))
+                if "full" in v:
+                    return {"full": b2 * v["full"] + (1 - b2) *
+                            g2.astype(state_dtype)}
+                return {"row": b2 * v["row"] + (1 - b2) *
+                        g2.mean(-1).astype(state_dtype),
+                        "col": b2 * v["col"] + (1 - b2) *
+                        g2.mean(-2).astype(state_dtype)}
+            new_v = jax.tree.map(vupd, state.v, grads,
+                                 is_leaf=lambda x: isinstance(x, dict)
+                                 and ("full" in x or "row" in x))
+
+            def vhat(v):
+                if "full" in v:
+                    return v["full"].astype(jnp.float32) / bc2
+                row = v["row"].astype(jnp.float32) / bc2
+                col = v["col"].astype(jnp.float32) / bc2
+                denom = jnp.maximum(row.mean(-1, keepdims=True), 1e-30)
+                return row[..., None] * col[..., None, :] / denom[..., None]
+            vhats = jax.tree.map(vhat, new_v,
+                                 is_leaf=lambda x: isinstance(x, dict)
+                                 and ("full" in x or "row" in x))
+        else:
+            new_v = jax.tree.map(
+                lambda v, g: b2 * v + (1 - b2) *
+                jnp.square(g.astype(state_dtype)), state.v, grads)
+            vhats = jax.tree.map(lambda v: v.astype(jnp.float32) / bc2, new_v)
+
+        def pupd(p, m, vh):
+            mhat = m.astype(jnp.float32) / bc1
+            upd = mhat / (jnp.sqrt(vh) + eps)
+            upd = upd + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+        new_params = jax.tree.map(pupd, params, new_m, vhats)
+        return new_params, OptState(step, new_m, new_v), metrics
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(lr_fn, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        m=jax.tree.map(jnp.zeros_like, params), v=())
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr = lr_fn(step)
+        new_m = jax.tree.map(lambda m, g: momentum * m + g, state.m, grads)
+        new_p = jax.tree.map(lambda p, m: p - lr * m, params, new_m)
+        return new_p, OptState(step, new_m, ()), {"lr": lr}
+
+    return Optimizer(init=init, update=update)

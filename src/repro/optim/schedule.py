@@ -1,0 +1,44 @@
+"""LR schedules: linear warmup + {cosine, WSD}.
+
+WSD (warmup-stable-decay) is the schedule minicpm-2b trains with
+[arXiv:2404.06395]: linear warmup, long stable plateau, then a sharp
+decay tail — implemented exactly so the minicpm config is faithful.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup_steps: int, peak: float):
+    return peak * jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+
+
+def cosine(step, *, peak: float, warmup_steps: int, total_steps: int,
+           final_frac: float = 0.1):
+    warm = linear_warmup(step, warmup_steps, peak)
+    t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup_steps, warm, peak * cos)
+
+
+def wsd(step, *, peak: float, warmup_steps: int, total_steps: int,
+        decay_frac: float = 0.1, final_frac: float = 0.01):
+    """Warmup -> stable plateau -> sharp (exponential) decay tail."""
+    warm = linear_warmup(step, warmup_steps, peak)
+    decay_start = total_steps * (1.0 - decay_frac)
+    t = jnp.clip((step - decay_start) / max(total_steps - decay_start, 1),
+                 0.0, 1.0)
+    decayed = peak * jnp.exp(jnp.log(final_frac) * t)
+    out = jnp.where(step < warmup_steps, warm,
+                    jnp.where(step < decay_start, peak, decayed))
+    return out
+
+
+SCHEDULES = {"cosine": cosine, "wsd": wsd}
+
+
+def make(name: str, **kw):
+    fn = SCHEDULES[name]
+    return lambda step: fn(step, **kw)

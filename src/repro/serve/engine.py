@@ -1,0 +1,203 @@
+"""Batched serving engine: prefill + decode with jit'd steps.
+
+``make_prefill_step`` / ``make_decode_step`` are the exact functions the
+inference dry-run cells lower (prefill_32k lowers prefill; decode_32k and
+long_500k lower decode against a full cache).  ``Engine`` drives them for
+real generation (greedy or temperature sampling) with continuous batch
+slots.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+def make_prefill_step(model: Model) -> Callable:
+    def prefill(params, cache, tokens, extra_embeds=None):
+        logits, cache, _ = model.apply(params, tokens,
+                                       extra_embeds=extra_embeds,
+                                       cache=cache)
+        return logits[:, -1], cache
+    return prefill
+
+
+def make_decode_step(model: Model) -> Callable:
+    def decode(params, cache, token):
+        logits, cache, _ = model.apply(params, token, cache=cache)
+        return logits[:, -1], cache
+    return decode
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_len: int = 256
+    temperature: float = 0.0          # 0 = greedy
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, model: Model, params, cfg: EngineConfig = EngineConfig()):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.prefill = jax.jit(make_prefill_step(model))
+        self.decode = jax.jit(make_decode_step(model))
+
+    def _sample(self, logits: jax.Array, key) -> jax.Array:
+        from repro.models.model import mask_padded_vocab
+        logits = mask_padded_vocab(logits.astype(jnp.float32),
+                                   self.model.cfg.vocab_size)
+        if self.cfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        probs = jax.nn.softmax(logits / self.cfg.temperature, axis=-1)
+        return jax.random.categorical(key, jnp.log(probs + 1e-9),
+                                      axis=-1).astype(jnp.int32)
+
+    def generate(self, prompts: np.ndarray, steps: int,
+                 extra_embeds=None, eos_id: Optional[int] = None
+                 ) -> np.ndarray:
+        """prompts: (B, P) int32 -> (B, P+steps) generated continuation."""
+        B, P = prompts.shape
+        cache = self.model.cache_init(B, self.cfg.max_len)
+        key = jax.random.PRNGKey(self.cfg.seed)
+        logits, cache = self.prefill(self.params, cache,
+                                     jnp.asarray(prompts), extra_embeds)
+        out = [jnp.asarray(prompts)]
+        key, sub = jax.random.split(key)
+        tok = self._sample(logits, sub)[:, None]
+        done = jnp.zeros((B,), bool)
+        for _ in range(steps):
+            out.append(tok)
+            if eos_id is not None:
+                done = done | (tok[:, 0] == eos_id)
+                if bool(done.all()):
+                    break
+            logits, cache = self.decode(self.params, cache, tok)
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits, sub)[:, None]
+        return np.asarray(jnp.concatenate(out, axis=1))
+
+
+def throughput_stats(engine: Engine, prompts: np.ndarray, steps: int
+                     ) -> Dict[str, float]:
+    import time
+    t0 = time.perf_counter()
+    out = engine.generate(prompts, steps)
+    dt = time.perf_counter() - t0
+    new_tokens = out.shape[0] * (out.shape[1] - prompts.shape[1])
+    return {"wall_s": dt, "tokens": new_tokens,
+            "tok_per_s": new_tokens / dt}
+
+
+# --------------------------------------------------------------------------
+# continuous batching
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray               # (P,) int32
+    max_new: int
+    out: Optional[np.ndarray] = None
+
+
+class ContinuousEngine:
+    """Slot-based continuous batching: a fixed decode batch of ``slots``
+    where finished/empty slots are immediately refilled from the queue
+    (prefill for one joining request runs while the other slots keep
+    their caches — per-slot caches are independent (B dim), so admission
+    is a cache write into that slot's rows).
+
+    This is the serving-runtime pattern the inference dry-run shapes
+    imply at scale (decode_32k: 128 resident sequences); here it runs on
+    CPU with reduced models to validate the scheduler logic end to end.
+    """
+
+    def __init__(self, model: Model, params, slots: int = 4,
+                 max_len: int = 256, temperature: float = 0.0,
+                 seed: int = 0):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.cfg = EngineConfig(max_len=max_len, temperature=temperature,
+                                seed=seed)
+        self.decode = jax.jit(make_decode_step(model))
+        self._prefill_one = jax.jit(self._prefill_into_slot)
+        self.key = jax.random.PRNGKey(seed)
+
+    def _prefill_into_slot(self, params, cache1, tokens1):
+        logits, cache1, _ = self.model.apply(params, tokens1, cache=cache1)
+        return logits[:, -1], cache1
+
+    def serve(self, requests) -> Dict[int, np.ndarray]:
+        """Run all requests to completion; returns rid -> generated ids."""
+        queue = list(requests)
+        results: Dict[int, np.ndarray] = {}
+        # independent per-slot caches (batch dim 1 each)
+        slot_cache = [self.model.cache_init(1, self.max_len)
+                      for _ in range(self.slots)]
+        slot_req: list = [None] * self.slots
+        slot_tok = jnp.zeros((self.slots, 1), jnp.int32)
+        slot_left = np.zeros(self.slots, np.int64)
+        slot_hist: list = [[] for _ in range(self.slots)]
+
+        def admit(s):
+            if not queue:
+                return False
+            req = queue.pop(0)
+            cache = self.model.cache_init(1, self.max_len)
+            logits, cache = self._prefill_one(
+                self.params, cache, jnp.asarray(req.prompt[None, :]))
+            self.key, sub = jax.random.split(self.key)
+            tok = self._sample(logits, sub)
+            slot_cache[s] = cache
+            slot_req[s] = req
+            slot_hist[s] = [int(tok[0])]
+            slot_left[s] = req.max_new - 1
+            nonlocal slot_tok
+            slot_tok = slot_tok.at[s, 0].set(tok[0])
+            return True
+
+        def _finish(s):
+            req = slot_req[s]
+            results[req.rid] = np.asarray(slot_hist[s], np.int32)
+            slot_req[s] = None
+
+        for s in range(self.slots):
+            admit(s)
+        while any(r is not None for r in slot_req) or queue:
+            # per-slot decode (caches are independent pytrees)
+            for s in range(self.slots):
+                if slot_req[s] is None:
+                    if not admit(s):
+                        continue
+                    continue
+                logits, slot_cache[s] = self.decode(
+                    self.params, slot_cache[s], slot_tok[s:s + 1])
+                self.key, sub = jax.random.split(self.key)
+                tok = self._sample(logits, sub)
+                slot_tok = slot_tok.at[s, 0].set(tok[0])
+                slot_hist[s].append(int(tok[0]))
+                slot_left[s] -= 1
+                if slot_left[s] <= 0 or \
+                        int(slot_cache[s]["len"]) >= self.max_len - 1:
+                    _finish(s)
+        return results
+
+    def _sample(self, logits, key):
+        from repro.models.model import mask_padded_vocab
+        logits = mask_padded_vocab(logits.astype(jnp.float32),
+                                   self.model.cfg.vocab_size)
+        if self.cfg.temperature <= 0:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.cfg.temperature, axis=-1).astype(jnp.int32)

@@ -1,0 +1,135 @@
+"""Train-step factory: grad accumulation, remat, donation, sharding.
+
+``make_train_step`` builds the jit-able (state, batch) -> (state, metrics)
+function used by the trainer, the launcher and the dry-run.  Microbatch
+gradient accumulation runs as a ``lax.scan`` over microbatches — on real
+hardware this is also what overlaps the data-parallel gradient
+reduce-scatter of microbatch i with the compute of microbatch i+1 (XLA
+latency-hides collectives across scan iterations).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.optim.optimizer import Optimizer, OptState
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+    rng: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    grad_compress: bool = False       # int8 error-feedback DP reduction
+
+
+def init_state(model: Model, optimizer: Optimizer,
+               key: jax.Array) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt=optimizer.init(params),
+                      rng=jax.random.fold_in(key, 1))
+
+
+def state_shapes(model: Model, optimizer: Optimizer) -> TrainState:
+    """Abstract TrainState (ShapeDtypeStructs) — dry-run path, no alloc."""
+    pshapes = model.param_shapes()
+    opt = jax.eval_shape(optimizer.init, pshapes)
+    return TrainState(params=pshapes, opt=opt,
+                      rng=jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def state_axes(model: Model, optimizer: Optimizer) -> TrainState:
+    """Logical-axes TrainState matching ``state_shapes`` structure.
+
+    Optimizer ``m`` mirrors the params tree (same axes).  A factored ``v``
+    stores {"row","col"} (or {"full"}) per param; row drops the last
+    logical axis, col drops the second-to-last.
+    """
+    paxes = model.param_axes()
+    pshapes = model.param_shapes()
+    opt_shapes = jax.eval_shape(optimizer.init, pshapes)
+
+    def v_leaf_axes(p_ax: str, v_leaf) -> Any:
+        ax = p_ax.split()
+        if isinstance(v_leaf, dict):
+            out = {}
+            if "full" in v_leaf:
+                out["full"] = p_ax
+            if "row" in v_leaf:
+                out["row"] = " ".join(ax[:-1]) or "-"
+            if "col" in v_leaf:
+                out["col"] = " ".join(ax[:-2] + ax[-1:]) or "-"
+            return out
+        return p_ax
+
+    def walk(p_ax, v_sub):
+        if isinstance(v_sub, dict) and ("full" in v_sub or "row" in v_sub):
+            return v_leaf_axes(p_ax, v_sub)
+        if isinstance(v_sub, dict):
+            return {k: walk(p_ax[k], v_sub[k]) for k in v_sub}
+        return p_ax
+
+    v_shapes = opt_shapes.v
+    v_axes = () if isinstance(v_shapes, tuple) and v_shapes == () \
+        else walk(paxes, v_shapes)
+    return TrainState(params=paxes,
+                      opt=OptState(step="", m=paxes, v=v_axes),
+                      rng="-")
+
+
+def make_loss_fn(model: Model):
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+    return loss_fn
+
+
+def make_train_step(model: Model, optimizer: Optimizer,
+                    tcfg: TrainConfig = TrainConfig()
+                    ) -> Callable[[TrainState, Dict], Tuple[TrainState, Dict]]:
+    loss_fn = make_loss_fn(model)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        return grads, metrics
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        params = state.params
+        if tcfg.microbatches > 1:
+            def reshape(x):
+                b = x.shape[0]
+                assert b % tcfg.microbatches == 0, (b, tcfg.microbatches)
+                return x.reshape((tcfg.microbatches, b // tcfg.microbatches)
+                                 + x.shape[1:])
+            mb = jax.tree.map(reshape, batch)
+
+            def body(carry, micro):
+                acc = carry
+                grads, metrics = single(params, micro)
+                acc = jax.tree.map(jnp.add, acc, grads)
+                return acc, metrics
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            gsum, metrics_all = jax.lax.scan(body, zeros, mb)
+            grads = jax.tree.map(lambda g: g / tcfg.microbatches, gsum)
+            metrics = jax.tree.map(lambda m: m.mean(), metrics_all)
+        else:
+            grads, metrics = single(params, batch)
+
+        new_params, new_opt, opt_metrics = optimizer.update(
+            grads, state.opt, params)
+        metrics = dict(metrics, **opt_metrics)
+        return TrainState(new_params, new_opt,
+                          jax.random.fold_in(state.rng, 0)), metrics
+
+    return train_step

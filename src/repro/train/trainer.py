@@ -1,0 +1,121 @@
+"""Training loop with fault tolerance: checkpoint/restart, preemption
+handling, straggler detection, elastic resume.
+
+Failure model on a 1000+-node fleet:
+  * **node loss / preemption** — SIGTERM triggers a final checkpoint;
+    the next incarnation of the job auto-resumes from the latest commit
+    (``Trainer.run`` is re-entrant by construction).
+  * **elastic rescale** — checkpoints are logical (see checkpointer);
+    restoring under a different mesh re-shards automatically.
+  * **stragglers** — per-step wall time is tracked with an EMA; steps
+    slower than ``straggler_factor``x the EMA are logged and counted.
+    On a real fleet this signal feeds the scheduler (hot-spare swap);
+    here it is surfaced in metrics and tested by injection.
+  * **data skew** — the pipeline is stateless; the step counter in the
+    manifest is the only data-state, so no replica can drift.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import checkpointer as ckpt
+from repro.data.pipeline import Pipeline
+from repro.train.step import TrainState
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    keep_checkpoints: int = 3
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    straggler_ema: float = 0.9
+
+
+class Trainer:
+    def __init__(self, cfg: TrainerConfig, train_step: Callable,
+                 pipeline: Pipeline,
+                 log_fn: Callable[[str], None] = print):
+        self.cfg = cfg
+        self.train_step = train_step
+        self.pipeline = pipeline
+        self.log = log_fn
+        self._preempted = False
+        self.metrics_history: List[Dict[str, float]] = []
+        self.straggler_events = 0
+
+    # ---- fault-tolerance hooks ----------------------------------------------
+
+    def install_preemption_handler(self):
+        def handler(signum, frame):
+            self._preempted = True
+        signal.signal(signal.SIGTERM, handler)
+
+    def _maybe_restore(self, state: TrainState):
+        d = self.cfg.checkpoint_dir
+        if not d:
+            return state, 0
+        step = ckpt.latest_step(d)
+        if step is None:
+            return state, 0
+        state, extra = ckpt.restore(d, step=step, target=state)
+        self.log(f"[trainer] resumed from step {extra['step']}")
+        return state, extra["step"]
+
+    def _save(self, state: TrainState, step: int):
+        if self.cfg.checkpoint_dir:
+            path = ckpt.save(self.cfg.checkpoint_dir, step, state,
+                             extra={"data_step": step},
+                             keep=self.cfg.keep_checkpoints)
+            self.log(f"[trainer] checkpointed step {step} -> {path}")
+
+    # ---- loop ----------------------------------------------------------------
+
+    def run(self, state: TrainState, start_step: int = 0,
+            sharding=None) -> TrainState:
+        state, resumed = self._maybe_restore(state)
+        step = max(start_step, resumed)
+        ema = None
+        first_step = True
+        while step < self.cfg.total_steps and not self._preempted:
+            batch = self.pipeline.jax_batch(step, sharding)
+            t0 = time.perf_counter()
+            state, metrics = self.train_step(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            # straggler detection (the first step carries jit compilation
+            # and is excluded from the EMA)
+            if ema is not None and dt > self.cfg.straggler_factor * ema:
+                self.straggler_events += 1
+                self.log(f"[trainer] straggler step {step}: {dt:.3f}s "
+                         f"(ema {ema:.3f}s)")
+            if first_step:
+                first_step = False
+            else:
+                ema = dt if ema is None else (self.cfg.straggler_ema * ema
+                                              + (1 - self.cfg.straggler_ema)
+                                              * dt)
+            step += 1
+            scalars = {k: float(np.asarray(v)) for k, v in metrics.items()}
+            scalars["step_time_s"] = dt
+            self.metrics_history.append(scalars)
+            if step % self.cfg.log_every == 0 or step == 1:
+                self.log(f"[trainer] step {step}: loss={scalars['loss']:.4f} "
+                         f"lr={scalars.get('lr', 0):.2e} {dt*1e3:.0f}ms")
+            if step % self.cfg.checkpoint_every == 0:
+                self._save(state, step)
+        if self._preempted:
+            self.log(f"[trainer] preempted at step {step}; checkpointing")
+            self._save(state, step)
+        elif self.cfg.checkpoint_dir:
+            self._save(state, step)
+        return state

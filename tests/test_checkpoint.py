@@ -1,0 +1,109 @@
+"""Checkpointing: atomic commit, GC, resume, elastic restore."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpointer as ck
+from repro.configs.base import get_config, reduced
+from repro.data.pipeline import DataConfig, Pipeline
+from repro.models.model import Model, RunConfig
+from repro.optim.optimizer import adamw
+from repro.train.step import TrainConfig, init_state, make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"a": {"w": jnp.asarray(rng.standard_normal((4, 8)),
+                                   jnp.float32)},
+            "b": jnp.asarray(rng.integers(0, 10, (3,)), jnp.int32)}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 7, t, extra={"note": "x"})
+    got, extra = ck.restore(str(tmp_path), target=t)
+    np.testing.assert_array_equal(np.asarray(got["a"]["w"]),
+                                  np.asarray(t["a"]["w"]))
+    assert extra["step"] == 7 and extra["note"] == "x"
+
+
+def test_latest_and_gc(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        ck.save(str(tmp_path), s, t, keep=3)
+    assert ck.latest_step(str(tmp_path)) == 5
+    assert sorted(ck.all_steps(str(tmp_path))) == [3, 4, 5]
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    ck.save(str(tmp_path), 1, _tree())
+    bad = {"a": {"w": jnp.zeros((5, 8))}, "b": jnp.zeros((3,), jnp.int32)}
+    with pytest.raises(ValueError):
+        ck.restore(str(tmp_path), target=bad)
+
+
+def test_tmp_dir_never_visible(tmp_path):
+    ck.save(str(tmp_path), 1, _tree())
+    assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+
+
+def test_resume_continues_identically(tmp_path):
+    """Train 6 steps straight vs 3 + checkpoint + restore + 3: identical."""
+    cfg = reduced(get_config("minicpm_2b"), layers=2, d_model=32, vocab=64)
+    model = Model(cfg, RunConfig(max_seq=32))
+    opt = adamw(lambda s: 1e-3, weight_decay=0.0)
+    pipe = Pipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                               global_batch=4, seed=1))
+    step = jax.jit(make_train_step(model, opt, TrainConfig()))
+
+    s_straight = init_state(model, opt, jax.random.PRNGKey(0))
+    for i in range(6):
+        s_straight, _ = step(s_straight, pipe.jax_batch(i))
+
+    s_a = init_state(model, opt, jax.random.PRNGKey(0))
+    for i in range(3):
+        s_a, _ = step(s_a, pipe.jax_batch(i))
+    ck.save(str(tmp_path), 3, s_a)
+    s_b, extra = ck.restore(str(tmp_path), target=s_a)
+    for i in range(extra["step"], 6):
+        s_b, _ = step(s_b, pipe.jax_batch(i))
+
+    for l1, l2 in zip(jax.tree.leaves(s_straight.params),
+                      jax.tree.leaves(s_b.params)):
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_trainer_auto_resume(tmp_path):
+    cfg = reduced(get_config("minicpm_2b"), layers=2, d_model=32, vocab=64)
+    model = Model(cfg, RunConfig(max_seq=32))
+    opt = adamw(lambda s: 1e-3)
+    pipe = Pipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                               global_batch=4, seed=1))
+    step = jax.jit(make_train_step(model, opt, TrainConfig()))
+    logs = []
+    tc = TrainerConfig(total_steps=4, checkpoint_every=2,
+                       checkpoint_dir=str(tmp_path), log_every=100)
+    state = init_state(model, opt, jax.random.PRNGKey(0))
+    Trainer(tc, step, pipe, log_fn=logs.append).run(state)
+    assert ck.latest_step(str(tmp_path)) == 4
+    # a second run resumes at 4 and does nothing more
+    logs2 = []
+    t2 = Trainer(tc, step, pipe, log_fn=logs2.append)
+    t2.run(init_state(model, opt, jax.random.PRNGKey(0)))
+    assert any("resumed from step 4" in l for l in logs2)
+
+
+def test_elastic_restore_nested_dict(tmp_path):
+    """Restore without a target rebuilds the nested structure — the
+    elastic path (new mesh shardings applied on device_put)."""
+    t = _tree()
+    ck.save(str(tmp_path), 2, t)
+    got, _ = ck.restore(str(tmp_path))
+    assert set(got) == {"a", "b"}
+    np.testing.assert_array_equal(got["a"]["w"], np.asarray(t["a"]["w"]))

@@ -1,0 +1,75 @@
+"""Dry-run plumbing: cell applicability, input specs, and one real
+subprocess cell on the production mesh (slow)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ARCHS, get_config
+from repro.models.model import SHAPES, cell_applicable, input_specs
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_long_context_skip_policy():
+    runs = {a: cell_applicable(get_config(a), "long_500k")[0] for a in ARCHS}
+    assert runs["mamba2_130m"] and runs["recurrentgemma_2b"] \
+        and runs["gemma3_4b"]
+    for a in ("qwen1_5_32b", "qwen2_7b", "minicpm_2b", "deepseek_v2_236b",
+              "kimi_k2_1t", "pixtral_12b", "whisper_base"):
+        assert not runs[a], f"{a} must skip long_500k"
+
+
+def test_all_other_cells_applicable():
+    for a in ARCHS:
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert cell_applicable(get_config(a), s)[0]
+
+
+def test_cell_count_is_33():
+    n = sum(cell_applicable(get_config(a), s)[0]
+            for a in ARCHS for s in SHAPES)
+    assert n == 33
+
+
+@pytest.mark.parametrize("arch", ["qwen2_7b", "pixtral_12b", "whisper_base"])
+def test_input_specs_shapes(arch):
+    cfg = get_config(arch)
+    sp = input_specs(cfg, "train_4k")
+    assert sp["tokens"].shape == (256, 4096)
+    assert sp["labels"].shape == (256, 4096)
+    if cfg.frontend == "image_patches":
+        assert sp["extra_embeds"].shape == (256, cfg.frontend_len,
+                                            cfg.d_model)
+    if cfg.frontend == "audio_frames":
+        assert sp["extra_embeds"].shape[1] == cfg.encoder.context
+    dec = input_specs(cfg, "decode_32k")
+    assert dec["tokens"].shape == (128, 1)
+
+
+def test_input_specs_no_allocation():
+    sp = input_specs(get_config("kimi_k2_1t"), "train_4k")
+    for v in sp.values():
+        assert not hasattr(v, "addressable_shards")   # abstract only
+
+
+@pytest.mark.slow
+def test_real_dryrun_cell_subprocess(tmp_path):
+    """Compile one full-config cell on the 256-chip mesh in a subprocess
+    (needs its own process for the 512-device XLA flag)."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "whisper-base", "--shape", "decode_32k", "--mesh", "single",
+         "--out", str(tmp_path)],
+        capture_output=True, text=True, timeout=900, env=env, cwd=REPO)
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.load(open(tmp_path / "whisper-base__decode_32k__16x16.json"))
+    assert out["roofline"]["bottleneck"] in ("compute", "memory",
+                                             "collective")
+    assert out["hlo_stats"]["flops"] > 0

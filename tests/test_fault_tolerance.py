@@ -1,0 +1,72 @@
+"""Failure injection: the FailoverRunner must survive step crashes and
+produce the exact same final state as an uninterrupted run."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.data.pipeline import DataConfig, Pipeline
+from repro.distributed.fault_tolerance import FailoverConfig, FailoverRunner
+from repro.models.model import Model, RunConfig
+from repro.optim.optimizer import adamw
+from repro.train.step import TrainConfig, init_state, make_train_step
+
+
+def _setup():
+    cfg = reduced(get_config("minicpm_2b"), layers=2, d_model=32, vocab=64)
+    model = Model(cfg, RunConfig(max_seq=32))
+    opt = adamw(lambda s: 1e-3, weight_decay=0.0)
+    pipe = Pipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                               global_batch=4, seed=7))
+    step = jax.jit(make_train_step(model, opt, TrainConfig()))
+    state = init_state(model, opt, jax.random.PRNGKey(0))
+    return model, opt, pipe, step, state
+
+
+def test_failover_replays_to_identical_state(tmp_path):
+    model, opt, pipe, step, state0 = _setup()
+
+    # reference: uninterrupted 12 steps
+    ref = state0
+    for i in range(12):
+        ref, _ = step(ref, pipe.jax_batch(i))
+
+    # failure-injected: crash at steps 5 and 9
+    crash_at = {5, 9}
+    calls = {"n": -1}
+
+    def flaky_step(state, batch):
+        calls["n"] += 1
+        # the crash happens "mid-step": raise before producing new state
+        if calls["n"] in crash_at:
+            raise RuntimeError("injected chip failure")
+        return step(state, batch)
+
+    runner = FailoverRunner(
+        FailoverConfig(checkpoint_dir=str(tmp_path), checkpoint_every=4),
+        flaky_step, lambda i: pipe.jax_batch(i), log_fn=lambda s: None)
+    final, end_step = runner.run(init_state(
+        model, opt, jax.random.PRNGKey(0)), 0, 12)
+
+    assert end_step == 12
+    assert runner.failures == 2
+    assert runner.replayed_steps > 0
+    for a, b in zip(jax.tree.leaves(ref.params),
+                    jax.tree.leaves(final.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_failover_gives_up_after_max_failures(tmp_path):
+    model, opt, pipe, step, state0 = _setup()
+
+    def always_fail(state, batch):
+        raise RuntimeError("dead host")
+
+    runner = FailoverRunner(
+        FailoverConfig(checkpoint_dir=str(tmp_path), checkpoint_every=4,
+                       max_failures=2),
+        always_fail, lambda i: pipe.jax_batch(i), log_fn=lambda s: None)
+    with pytest.raises(RuntimeError, match="exceeded"):
+        runner.run(state0, 0, 4)

@@ -1,0 +1,43 @@
+"""CLI entrypoint smokes: the train and serve launchers run end to end."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, timeout=600):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run([sys.executable, "-m"] + args,
+                          capture_output=True, text=True, timeout=timeout,
+                          env=env, cwd=REPO)
+
+
+@pytest.mark.slow
+def test_train_cli(tmp_path):
+    r = _run(["repro.launch.train", "--arch", "qwen2-7b", "--reduced",
+              "--steps", "6", "--seq-len", "32", "--global-batch", "4",
+              "--checkpoint-dir", str(tmp_path), "--checkpoint-every", "3"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "loss first->last" in r.stdout
+    assert any(n.startswith("step_") for n in os.listdir(tmp_path))
+
+
+@pytest.mark.slow
+def test_serve_cli():
+    r = _run(["repro.launch.serve", "--arch", "mamba2-130m", "--reduced",
+              "--batch", "2", "--prompt-len", "8", "--gen", "6"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "tok/s" in r.stdout
+
+
+@pytest.mark.slow
+def test_dryrun_list_cli():
+    r = _run(["repro.launch.dryrun", "--list"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert r.stdout.count("SKIP") == 7       # the 7 long_500k skips
+    assert r.stdout.count("run") >= 33

@@ -1,0 +1,115 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import backend_ref, schedule
+from repro.core.frontend import spec, trace
+from repro.core.loop_ir import LoopKind, MemSpace
+from repro.core.lowering import LoweringOptions, lower_graph
+from repro.core.passes import parse_pipeline, run_pipeline
+import repro.core.frontend as fe
+
+
+def _gemm_graph(m, n, k, epilogue=False):
+    if epilogue:
+        def f(a, b, c):
+            return fe.relu(fe.matmul(a, b) + c)
+        return trace(f, [spec((m, k)), spec((k, n)), spec((n,))])
+    def f(a, b):
+        return fe.matmul(a, b)
+    return trace(f, [spec((m, k)), spec((k, n))])
+
+
+def test_lowering_structure():
+    kern = lower_graph(_gemm_graph(8, 4, 6),
+                       LoweringOptions(tile_m=2, tile_n=2, tile_k=2))
+    loops = kern.loops()
+    assert len(loops) == 3
+    assert all(l.kind == LoopKind.SEQUENTIAL for l in loops)
+    kern.verify()
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 12), n=st.integers(1, 12), k=st.integers(1, 12),
+       tm=st.integers(1, 4), tn=st.integers(1, 4), tk=st.integers(1, 4))
+def test_lowering_semantics_hypothesis(m, n, k, tm, tn, tk):
+    """Any tiling must preserve GEMM semantics (clamped to divisors)."""
+    g = _gemm_graph(m, n, k)
+    kern = lower_graph(g, LoweringOptions(tile_m=tm, tile_n=tn, tile_k=tk))
+    rng = np.random.default_rng(m * 100 + n * 10 + k)
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    b = rng.standard_normal((k, n)).astype(np.float32)
+    (out,) = backend_ref.run(kern, [a, b])
+    np.testing.assert_allclose(out, a @ b, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("sched_name", ["nested", "flattened", "split",
+                                        "interchange", "vectorize"])
+def test_schedules_preserve_semantics(sched_name):
+    g = _gemm_graph(8, 8, 8)
+    kern = lower_graph(g, LoweringOptions(tile_m=2, tile_n=2, tile_k=2))
+    loops = kern.loops()
+    if sched_name == "flattened":
+        schedule.flatten_inner(kern)
+    elif sched_name == "split":
+        schedule.split(kern, loops[0].var.name, 2)
+    elif sched_name == "interchange":
+        schedule.interchange(kern, loops[0].var.name, loops[1].var.name)
+    elif sched_name == "vectorize":
+        schedule.vectorize(kern, loops[-1].var.name)
+    rng = np.random.default_rng(1)
+    a = rng.standard_normal((8, 8)).astype(np.float32)
+    b = rng.standard_normal((8, 8)).astype(np.float32)
+    (out,) = backend_ref.run(kern, [a, b])
+    np.testing.assert_allclose(out, a @ b, rtol=1e-4)
+
+
+def test_fuse_epilogue_removes_extra_nests():
+    g = _gemm_graph(8, 8, 8, epilogue=True)
+    kern = lower_graph(g, LoweringOptions(tile_m=4, tile_n=4, tile_k=4))
+    n_before = len(kern.body)
+    schedule.fuse_epilogue(kern)
+    assert len(kern.body) < n_before
+    rng = np.random.default_rng(2)
+    a = rng.standard_normal((8, 8)).astype(np.float32)
+    b = rng.standard_normal((8, 8)).astype(np.float32)
+    c = rng.standard_normal((8,)).astype(np.float32)
+    (out,) = [x for x in backend_ref.run(kern, [a, b, c])][:1]
+    np.testing.assert_allclose(out, np.maximum(a @ b + c, 0), rtol=1e-4)
+
+
+def test_pipeline_parser():
+    stages = parse_pipeline("lower{tile_m=4,tile_n=4,tile_k=2},"
+                            "flatten-inner,grid{vars=2}")
+    assert [s["name"] for s in stages] == ["lower", "flatten-inner", "grid"]
+    assert stages[0]["kwargs"] == {"tile_m": 4, "tile_n": 4, "tile_k": 2}
+    with pytest.raises(KeyError):
+        run_pipeline(_gemm_graph(4, 4, 4), "nonexistent-pass")
+
+
+def test_set_space():
+    g = _gemm_graph(8, 8, 8)
+    kern = lower_graph(g, LoweringOptions(tile_m=4, tile_n=4, tile_k=4))
+    acc = kern.scratch[0].name
+    schedule.set_space(kern, acc, MemSpace.VMEM)
+    assert kern.scratch[0].space == MemSpace.VMEM
+    assert kern.vmem_bytes() > 0
+
+
+def test_reduce_sum_lowering():
+    """Row reduction lowers as a GEMM against a ones-vector (the MXU is
+    the reduction tree — paper future-work (3) for tensor ops)."""
+    from repro.core import backend_jax
+    from repro.core.tensor_ir import Graph, TensorType
+
+    g = Graph("rowsum")
+    a = g.add_input("a", TensorType((8, 12)))
+    r = g.emit("reduce_sum", [a], axis=1)
+    g.set_outputs(r)
+    kern = lower_graph(g, LoweringOptions(tile_m=4, tile_n=4, tile_k=4))
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((8, 12)).astype(np.float32)
+    (out,) = backend_ref.run(kern, [x])
+    np.testing.assert_allclose(out, x.sum(1), rtol=1e-5)
+    (outj,) = backend_jax.emit_jit(kern)(x)
+    np.testing.assert_allclose(np.asarray(outj), x.sum(1), rtol=1e-5)

@@ -1,0 +1,74 @@
+"""Cycle/resource model tests — the TABLE I / Fig. 3 reproduction gates."""
+
+import pytest
+
+from repro.core.pipeline import compile_gemm
+
+PAPER_TABLE1 = {          # size: (nested, inner-flattened) cycles, 1ns/cycle
+    4: (1_498, 1_114), 8: (10_762, 7_946), 16: (81_802, 60_298),
+    32: (867_594, 470_282), 64: (5_042_698, 3_527_115),
+    128: (38_324_504, 26_806_047),
+}
+
+
+def _cycles(size, sched):
+    ck = compile_gemm(size, size, size, schedule=sched,
+                      want_jax=False, want_pallas=False)
+    return ck.cycles.total, ck.resources
+
+
+@pytest.mark.parametrize("size", sorted(PAPER_TABLE1))
+def test_table1_flattened_faster(size):
+    n, _ = _cycles(size, "nested")
+    f, _ = _cycles(size, "inner_flattened")
+    assert f < n, "flattened must consume fewer cycles (TABLE I)"
+
+
+@pytest.mark.parametrize("size", [4, 8, 16, 64, 128])
+def test_table1_ratio_band(size):
+    """Model ratio must sit in the paper's observed band (1.3-1.5).
+    (The paper's 32x32 nested entry is a self-inconsistent outlier —
+    1.85x while every other size steps ~8x; excluded, see EXPERIMENTS.md.)
+    """
+    n, _ = _cycles(size, "nested")
+    f, _ = _cycles(size, "inner_flattened")
+    assert 1.25 <= n / f <= 1.55
+
+
+@pytest.mark.parametrize("size", [64, 128])
+def test_table1_absolute_calibration(size):
+    """Within 15% absolute of the paper's cycle counts at large sizes."""
+    n, _ = _cycles(size, "nested")
+    f, _ = _cycles(size, "inner_flattened")
+    pn, pf = PAPER_TABLE1[size]
+    assert abs(n - pn) / pn < 0.15
+    assert abs(f - pf) / pf < 0.15
+
+
+def test_fig3_nested_resources_constant():
+    lanes = [_cycles(s, "nested")[1].compute_lanes for s in (8, 32, 128)]
+    assert lanes[0] == lanes[1] == lanes[2] == 1, \
+        "nested = time-division multiplexing of one datapath (Fig. 3a)"
+
+
+def test_fig3_flattened_resources_proportional():
+    lanes = [_cycles(s, "inner_flattened")[1].compute_lanes
+             for s in (8, 32, 128)]
+    assert lanes == [8, 32, 128], \
+        "flattened hardware grows with matrix size (Fig. 3b)"
+
+
+def test_tpu_schedule_dominates_scalar():
+    """Beyond-paper: the MXU schedule must beat both scalar schedules by
+    orders of magnitude (the point of adapting the pipeline to TPU)."""
+    n, _ = _cycles(128, "nested")
+    ck = compile_gemm(128, 128, 128, schedule="tpu_mxu_kgrid",
+                      want_jax=False, want_pallas=False)
+    assert ck.cycles.total * 100 < n
+
+
+def test_cycle_report_components_sum():
+    ck = compile_gemm(16, 16, 16, schedule="nested",
+                      want_jax=False, want_pallas=False)
+    c = ck.cycles
+    assert abs(c.total - (c.compute + c.memory + c.control)) <= 2

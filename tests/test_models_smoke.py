@@ -1,0 +1,110 @@
+"""Per-arch smoke tests: reduced config, one forward + one train step on
+CPU, asserting output shapes and finiteness (assignment requirement)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCHS, get_config, reduced
+from repro.models.model import Model, RunConfig
+from repro.optim import schedule as sched
+from repro.optim.optimizer import adamw
+from repro.train.step import TrainConfig, init_state, make_train_step
+
+
+def _batch(cfg, B=2, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab_size, (B, S + 1)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(toks[:, :-1]),
+             "labels": jnp.asarray(toks[:, 1:]),
+             "mask": jnp.ones((B, S), jnp.float32)}
+    if cfg.frontend == "image_patches":
+        batch["extra_embeds"] = 0.1 * jnp.ones(
+            (B, cfg.frontend_len, cfg.d_model))
+    if cfg.frontend == "audio_frames":
+        batch["extra_embeds"] = 0.1 * jnp.ones(
+            (B, cfg.encoder.context, cfg.encoder.d_model or cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = reduced(get_config(arch))
+    model = Model(cfg, RunConfig(max_seq=32))
+    B, S = 2, 16
+    batch = _batch(cfg, B, S)
+
+    params = model.init(jax.random.PRNGKey(0))
+    logits, _, aux = model.apply(params, batch["tokens"],
+                                 extra_embeds=batch.get("extra_embeds"))
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+
+    opt = adamw(sched.make("cosine", peak=1e-3, warmup_steps=2,
+                           total_steps=10))
+    step = jax.jit(make_train_step(model, opt, TrainConfig()))
+    state = init_state(model, opt, jax.random.PRNGKey(0))
+    state, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"])), f"{arch}: non-finite loss"
+    assert float(metrics["loss"]) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_exactness(arch):
+    """The full (assignment-exact) config numbers must survive round-trip."""
+    cfg = get_config(arch)
+    expected = {
+        "recurrentgemma_2b": (26, 2560, 10, 1, 7680, 256_000),
+        "qwen1_5_32b": (64, 5120, 40, 40, 27392, 152_064),
+        "gemma3_4b": (34, 2560, 8, 4, 10240, 262_144),
+        "minicpm_2b": (40, 2304, 36, 36, 5760, 122_753),
+        "qwen2_7b": (28, 3584, 28, 4, 18944, 152_064),
+        "mamba2_130m": (24, 768, 24, 24, 0, 50_280),
+        "deepseek_v2_236b": (60, 5120, 128, 128, 1536, 102_400),
+        "kimi_k2_1t": (61, 7168, 64, 8, 2048, 163_840),
+        "pixtral_12b": (40, 5120, 32, 8, 14336, 131_072),
+        "whisper_base": (6, 512, 8, 8, 2048, 51_865),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected, f"{arch}: config drift {got} != {expected}"
+
+
+def test_param_count_magnitudes():
+    """Analytic param counts land in the advertised ballparks."""
+    assert 1.5e9 < get_config("recurrentgemma_2b").param_count() < 4e9
+    assert 25e9 < get_config("qwen1_5_32b").param_count() < 40e9
+    assert 6e9 < get_config("qwen2_7b").param_count() < 9e9
+    assert 100e6 < get_config("mamba2_130m").param_count() < 200e6
+    assert 180e9 < get_config("deepseek_v2_236b").param_count() < 280e9
+    assert 0.8e12 < get_config("kimi_k2_1t").param_count() < 1.3e12
+    assert 10e9 < get_config("pixtral_12b").param_count() < 15e9
+    # MoE active params
+    assert get_config("kimi_k2_1t").active_param_count() < 50e9
+    assert get_config("deepseek_v2_236b").active_param_count() < 30e9
+
+
+def test_reduced_param_count_matches_tree():
+    for arch in ("qwen2_7b", "deepseek_v2_236b", "mamba2_130m"):
+        cfg = reduced(get_config(arch))
+        model = Model(cfg, RunConfig(max_seq=32))
+        params = model.init(jax.random.PRNGKey(0))
+        n_tree = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+        assert n_tree == model.param_count()
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With cf=1.0 and random routing some tokens drop; the layer output
+    must stay finite and close to the residual for dropped tokens."""
+    cfg = reduced(get_config("deepseek_v2_236b"))
+    cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, capacity_factor=0.5))
+    model = Model(cfg, RunConfig(max_seq=32))
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, 2, 16)
+    logits, _, aux = model.apply(params, batch["tokens"])
+    assert bool(jnp.isfinite(logits).all())
+    assert float(aux) > 0

@@ -1,0 +1,70 @@
+"""Serving engine: generation, determinism, throughput probe."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.models.model import Model, RunConfig
+from repro.serve.engine import Engine, EngineConfig, throughput_stats
+
+
+def _engine(arch="qwen2_7b", max_len=48, temp=0.0):
+    cfg = reduced(get_config(arch))
+    model = Model(cfg, RunConfig(max_seq=max_len))
+    params = model.init(jax.random.PRNGKey(0))
+    return Engine(model, params, EngineConfig(max_len=max_len,
+                                              temperature=temp)), cfg
+
+
+def test_generate_shapes():
+    eng, cfg = _engine()
+    prompts = np.zeros((3, 8), np.int32)
+    out = eng.generate(prompts, 5)
+    assert out.shape == (3, 13)
+    assert out.min() >= 0 and out.max() < cfg.padded_vocab
+
+
+def test_greedy_is_deterministic():
+    eng, _ = _engine()
+    prompts = np.arange(16, dtype=np.int32).reshape(2, 8)
+    a = eng.generate(prompts, 6)
+    b = eng.generate(prompts, 6)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_sampled_tokens_within_true_vocab():
+    """Padded logit columns must never be sampled."""
+    eng, cfg = _engine(temp=1.0)
+    prompts = np.zeros((2, 4), np.int32)
+    out = eng.generate(prompts, 8)
+    assert out.max() < cfg.vocab_size
+
+
+def test_eos_early_stop():
+    eng, cfg = _engine()
+    prompts = np.zeros((1, 4), np.int32)
+    # force eos on the first sampled token by learning nothing: just check
+    # the loop respects an impossible eos (no early stop) vs eos=argmax
+    full = eng.generate(prompts, 4, eos_id=None)
+    assert full.shape[1] == 8
+
+
+def test_recurrent_arch_serving():
+    eng, cfg = _engine("recurrentgemma_2b")
+    out = eng.generate(np.zeros((2, 6), np.int32), 4)
+    assert out.shape == (2, 10)
+
+
+def test_ssm_arch_serving():
+    eng, cfg = _engine("mamba2_130m")
+    out = eng.generate(np.zeros((2, 6), np.int32), 4)
+    assert out.shape == (2, 10)
+
+
+def test_throughput_stats():
+    eng, _ = _engine()
+    stats = throughput_stats(eng, np.zeros((2, 4), np.int32), 3)
+    assert stats["tokens"] == 6
+    assert stats["tok_per_s"] > 0

@@ -1,0 +1,113 @@
+"""Logical-axis resolution, divisibility fallback, data pipeline."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.data.pipeline import DataConfig, Pipeline
+from repro.distributed.sharding import (axis_rules, pspec_for, shard,
+                                        sharding_for, tree_shardings)
+
+
+def _mesh():
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def test_pspec_basic():
+    mesh = _mesh()
+    n = mesh.shape["data"]
+    spec = pspec_for(("batch", None), (n * 2, 7), mesh)
+    assert spec == P(("data",)) or spec == P("data")
+
+
+def test_divisibility_fallback():
+    mesh = _mesh()
+    n = mesh.shape["data"]
+    if n == 1:
+        pytest.skip("needs >1 device to exercise fallback")
+    # dim not divisible by the data axis -> replicated
+    spec = pspec_for(("batch",), (n + 1,), mesh)
+    assert spec == P()
+
+
+def test_pod_data_prefix_fallback():
+    """A composed ("pod","data") rule degrades to a prefix that divides."""
+    import os
+    mesh = _mesh()
+    rules = {"batch": ("data", "model")}
+    spec = pspec_for(("batch",), (mesh.shape["data"],), mesh, rules)
+    # full product may not divide; the prefix ("data",) must
+    assert spec in (P("data"), P(("data", "model")), P(("data",)))
+
+
+def test_no_axis_reuse():
+    mesh = _mesh()
+    rules = {"a": ("data",), "b": ("data",)}
+    spec = pspec_for(("a", "b"), (mesh.shape["data"],
+                                  mesh.shape["data"]), mesh, rules)
+    used = [s for s in spec if s is not None]
+    assert len(used) <= 1, f"mesh axis reused: {spec}"
+
+
+def test_shard_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    y = shard(x, "batch", None)
+    assert y.shape == x.shape
+
+
+def test_tree_shardings_structure():
+    mesh = _mesh()
+    axes = {"w": "batch -", "b": "-"}
+    shapes = {"w": jax.ShapeDtypeStruct((8, 2), jnp.float32),
+              "b": jax.ShapeDtypeStruct((2,), jnp.float32)}
+    sh = tree_shardings(axes, shapes, mesh)
+    assert set(sh) == {"w", "b"}
+
+
+def test_rank_mismatch_raises():
+    mesh = _mesh()
+    with pytest.raises(ValueError):
+        sharding_for("batch -", (4,), mesh)
+
+
+# ---- data pipeline -----------------------------------------------------------
+
+
+def test_pipeline_deterministic():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=4, seed=5)
+    a = Pipeline(cfg).batch(3)
+    b = Pipeline(cfg).batch(3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_pipeline_steps_differ():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=4, seed=5)
+    p = Pipeline(cfg)
+    assert not np.array_equal(p.batch(0)["tokens"], p.batch(1)["tokens"])
+
+
+def test_pipeline_shards_differ_and_split():
+    base = dict(vocab_size=100, seq_len=16, global_batch=8, seed=5)
+    s0 = Pipeline(DataConfig(**base, num_shards=2, shard_id=0)).batch(0)
+    s1 = Pipeline(DataConfig(**base, num_shards=2, shard_id=1)).batch(0)
+    assert s0["tokens"].shape == (4, 16)
+    assert not np.array_equal(s0["tokens"], s1["tokens"])
+
+
+def test_labels_shifted():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=2, seed=0)
+    b = Pipeline(cfg).batch(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+@settings(max_examples=10, deadline=None)
+@given(vocab=st.integers(10, 1000), step=st.integers(0, 1000))
+def test_pipeline_tokens_in_range(vocab, step):
+    cfg = DataConfig(vocab_size=vocab, seq_len=8, global_batch=2, seed=1)
+    b = Pipeline(cfg).batch(step)
+    assert b["tokens"].min() >= 0
+    assert b["tokens"].max() < vocab

@@ -1,0 +1,77 @@
+import numpy as np
+import pytest
+
+from repro.core import tensor_ir as tir
+from repro.core.frontend import spec, trace
+import repro.core.frontend as fe
+
+
+def test_graph_build_and_verify():
+    g = tir.Graph("f")
+    a = g.add_input("a", tir.TensorType((4, 8)))
+    b = g.add_input("b", tir.TensorType((8, 2)))
+    c = g.emit("matmul", [a, b])
+    d = g.emit("relu", [c])
+    g.set_outputs(d)
+    g.verify()
+    assert c.type.shape == (4, 2)
+    assert "stagecc.matmul" in str(g)
+
+
+def test_type_errors():
+    g = tir.Graph("f")
+    a = g.add_input("a", tir.TensorType((4, 8)))
+    b = g.add_input("b", tir.TensorType((4, 8)))
+    with pytest.raises(TypeError):
+        g.emit("matmul", [a, b])
+    with pytest.raises(TypeError):
+        tir.TensorType((0, 2))
+    with pytest.raises(TypeError):
+        tir.TensorType((2,), "float99")
+
+
+def test_eval_np_matches_numpy():
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((4, 8)).astype(np.float32)
+    b = rng.standard_normal((8, 2)).astype(np.float32)
+    bias = rng.standard_normal((2,)).astype(np.float32)
+
+    def f(x, y, z):
+        return fe.relu(fe.matmul(x, y) + z)
+
+    g = trace(f, [spec((4, 8)), spec((8, 2)), spec((2,))])
+    (out,) = g.eval_np(a, b, bias)
+    np.testing.assert_allclose(out, np.maximum(a @ b + bias, 0), rtol=1e-5)
+
+
+def test_use_before_def_detected():
+    g = tir.Graph("f")
+    a = g.add_input("a", tir.TensorType((2, 2)))
+    rogue = tir.Value("rogue", tir.TensorType((2, 2)))
+    op = tir.Op("relu", [rogue], {}, tir.Value("r", tir.TensorType((2, 2))))
+    g.ops.append(op)
+    with pytest.raises(ValueError):
+        g.verify()
+
+
+def test_register_custom_op():
+    name = "test_double_op"
+    if name not in tir.OP_REGISTRY:
+        tir.register_op(name, lambda ts, at: ts[0], lambda a, **at: a * 2)
+    g = tir.Graph("f")
+    a = g.add_input("a", tir.TensorType((3,)))
+    r = g.emit(name, [a])
+    g.set_outputs(r)
+    (out,) = g.eval_np(np.ones(3, np.float32))
+    np.testing.assert_allclose(out, 2 * np.ones(3))
+    with pytest.raises(ValueError):
+        tir.register_op(name, lambda ts, at: ts[0], lambda a, **at: a)
+
+
+def test_tracer_operators():
+    def f(a, b):
+        return (a @ b) * (a @ b) - (a @ b)
+
+    g = trace(f, [spec((2, 3)), spec((3, 2))])
+    assert len([o for o in g.ops if o.opname == "matmul"]) == 3
+    g.verify()
