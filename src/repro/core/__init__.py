@@ -4,20 +4,31 @@ Levels (Fig. 1 of the paper):
     frontend (SYCL/DPC++ role)  ->  TensorIR (MLIR role)
         ->  LoopIR (Calyx role)  ->  backends (RTL-emission role)
 with cycle/resource models standing in for Vivado simulation/synthesis.
+
+See docs/ARCHITECTURE.md for the stage-by-stage map and
+docs/PASSES.md (generated) for the pass reference.
 """
 
 from .autotune import best_schedule, compile_gemm_autotuned
 from .frontend import spec, trace
+from .ir_text import (ir_size, parse_graph, parse_ir, parse_kernel,
+                      print_graph, print_ir, print_kernel)
 from .lowering import LoweringOptions, lower_graph
 from .machine_model import TPU_V5E, MachineModel, cycles, flops, hbm_bytes, resources
-from .passes import PASS_REGISTRY, parse_pipeline, register_pass, run_pipeline
+from .passes import (PASS_ALIASES, PASS_REGISTRY, PassDef, PassError,
+                     PassManager, PassRecord, PipelineResult, parse_pipeline,
+                     register_pass, run_pipeline)
 from .pipeline import SCHEDULES, CompiledKernel, compile_gemm, compile_traced
 from .tensor_ir import Graph, OP_REGISTRY, TensorType, register_op
 
 __all__ = [
     "spec", "trace", "LoweringOptions", "lower_graph", "TPU_V5E",
     "MachineModel", "cycles", "flops", "hbm_bytes", "resources",
-    "PASS_REGISTRY", "parse_pipeline", "register_pass", "run_pipeline",
+    "PASS_ALIASES", "PASS_REGISTRY", "PassDef", "PassError", "PassManager",
+    "PassRecord", "PipelineResult", "parse_pipeline", "register_pass",
+    "run_pipeline",
+    "ir_size", "parse_graph", "parse_ir", "parse_kernel",
+    "print_graph", "print_ir", "print_kernel",
     "SCHEDULES", "CompiledKernel", "compile_gemm", "compile_traced",
     "Graph", "OP_REGISTRY", "TensorType", "register_op",
 ]

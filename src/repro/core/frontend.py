@@ -18,6 +18,7 @@ Example::
 from __future__ import annotations
 
 import dataclasses
+import re
 from typing import Callable, List, Sequence
 
 from .tensor_ir import Graph, TensorType, Value
@@ -99,7 +100,9 @@ def cast(a: Tracer, dtype: str) -> Tracer:
 
 
 def trace(fn: Callable, in_specs: Sequence[spec], name: str = None) -> Graph:
-    g = Graph(name or fn.__name__)
+    # sanitise so the graph name is legal in textual IR (`<lambda>` etc.
+    # would make str(graph) unparseable by ir_text)
+    g = Graph(re.sub(r"[^\w.\-]", "_", name or fn.__name__))
     tracers = []
     for i, sp in enumerate(in_specs):
         v = g.add_input(f"arg{i}", TensorType(tuple(sp.shape), sp.dtype))

@@ -79,10 +79,8 @@ class AffineExpr:
         return self.const + sum(env[v] * s for v, s in self.coeffs)
 
     def __str__(self):
-        parts = [f"{s}*{v}" if s != 1 else v for v, s in self.coeffs]
-        if self.const or not parts:
-            parts.append(str(self.const))
-        return "+".join(parts)
+        from . import ir_text
+        return ir_text.print_affine(self)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,9 +125,8 @@ class TileRef:
         return tuple(out)
 
     def __str__(self):
-        idx = ", ".join(str(e) for e in self.index)
-        t = "x".join(str(t) for t in self.tile)
-        return f"{self.buffer.name}[{idx} : {t}]"
+        from . import ir_text
+        return ir_text.print_tileref(self)
 
 
 # --------------------------------------------------------------------------
@@ -139,7 +136,10 @@ class TileRef:
 
 @dataclasses.dataclass
 class Stmt:
-    pass
+    def __str__(self):
+        # canonical (parseable) statement text lives in ir_text
+        from . import ir_text
+        return "\n".join(ir_text.print_stmt(self))
 
 
 @dataclasses.dataclass
@@ -147,9 +147,6 @@ class ZeroTile(Stmt):
     """dst <- 0  (accumulator initialisation)."""
 
     dst: TileRef
-
-    def __str__(self):
-        return f"zero {self.dst}"
 
 
 @dataclasses.dataclass
@@ -176,10 +173,6 @@ class MatmulTile(Stmt):
         n = self.rhs.tile[-1]
         return m * n * k
 
-    def __str__(self):
-        op = "+=" if self.accumulate else "="
-        return f"{self.dst} {op} mxu.matmul({self.lhs}, {self.rhs})"
-
 
 @dataclasses.dataclass
 class EwiseTile(Stmt):
@@ -189,24 +182,12 @@ class EwiseTile(Stmt):
     dst: TileRef
     srcs: List[TileRef]
 
-    def __str__(self):
-        s = ", ".join(str(x) for x in self.srcs)
-        return f"{self.dst} = vpu.{self.op}({s})"
-
 
 @dataclasses.dataclass
 class Loop(Stmt):
     var: LoopVar
     kind: LoopKind
     body: List[Stmt]
-
-    def __str__(self):
-        head = f"for %{self.var.name} in [0,{self.var.extent}) " \
-               f"@{self.kind.value} {{"
-        inner = []
-        for s in self.body:
-            inner.extend("  " + line for line in str(s).splitlines())
-        return "\n".join([head, *inner, "}"])
 
 
 @dataclasses.dataclass
@@ -282,14 +263,10 @@ class Kernel:
         return sum(b.type.nbytes for b in self.scratch if b.space == MemSpace.VMEM)
 
     def __str__(self):
-        ps = ", ".join(str(b) for b in self.params)
-        lines = [f"stagecc.kernel @{self.name}({ps}) {{"]
-        for b in self.scratch:
-            lines.append(f"  alloc {b}")
-        for s in self.body:
-            lines.extend("  " + line for line in str(s).splitlines())
-        lines.append("}")
-        return "\n".join(lines)
+        # canonical textual form lives in ir_text (it round-trips through
+        # ir_text.parse_kernel); delegate so str() and the parser can't drift.
+        from . import ir_text
+        return ir_text.print_kernel(self)
 
 
 def _stmt_refs(s: Stmt) -> List[TileRef]:

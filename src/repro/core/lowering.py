@@ -21,6 +21,14 @@ from .loop_ir import (AffineExpr, Buffer, EwiseTile, Kernel, Loop, LoopKind,
 from .tensor_ir import Graph, Op, TensorType, Value
 
 
+def fit_tile(tile: int, dim: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``tile`` (always >= 1)."""
+    t = min(tile, dim)
+    while dim % t:
+        t -= 1
+    return t
+
+
 @dataclasses.dataclass
 class LoweringOptions:
     """Tiling choices consumed at lowering time (like linalg tiling)."""
@@ -32,14 +40,9 @@ class LoweringOptions:
     use_accumulator: bool = True
 
     def clamp(self, m: int, n: int, k: int) -> "LoweringOptions":
-        def pick(t, d):
-            t = min(t, d)
-            while d % t:
-                t -= 1
-            return t
-        return LoweringOptions(tile_m=pick(self.tile_m, m),
-                               tile_n=pick(self.tile_n, n),
-                               tile_k=pick(self.tile_k, k),
+        return LoweringOptions(tile_m=fit_tile(self.tile_m, m),
+                               tile_n=fit_tile(self.tile_n, n),
+                               tile_k=fit_tile(self.tile_k, k),
                                use_accumulator=self.use_accumulator)
 
 
@@ -109,20 +112,14 @@ class _Lowerer:
         O = self.buf_for(out)
         shape = out.type.shape
 
-        def fit(t, d):
-            t = min(t, d)
-            while d % t:
-                t -= 1
-            return t
-
         # tile the trailing two dims like the matmul output (tile_m, tile_n)
         # so elementwise epilogues walk the same tile grid as the producer
         # and ``fuse_epilogue`` can merge the nests.
         tiles = [1] * len(shape)
         if shape:
-            tiles[-1] = fit(self.opts.tile_n, shape[-1])
+            tiles[-1] = fit_tile(self.opts.tile_n, shape[-1])
         if len(shape) >= 2:
-            tiles[-2] = fit(self.opts.tile_m, shape[-2])
+            tiles[-2] = fit_tile(self.opts.tile_m, shape[-2])
         loop_vars = [LoopVar(self.uid("e"), shape[d] // tiles[d])
                      for d in range(len(shape))]
         idx = tuple(AffineExpr.of(v) for v in loop_vars)

@@ -1,9 +1,21 @@
-"""Pass manager + pipeline parser — the reusability/extensibility layer.
+"""Multi-level pass manager — the reusability/extensibility layer.
 
 The paper encapsulates its whole lowering flow "using a script"; here the
-script is a declarative pipeline string, e.g.::
+script is either a declarative pipeline string, e.g.::
 
     lower{tile_m=128,tile_n=128,tile_k=128},flatten-inner,grid{vars=2},emit-pallas
+
+or a programmatically-built :class:`PassManager`::
+
+    pm = PassManager().add("lower", tile_m=128).add("flatten-inner")
+    result = pm.run(graph)
+
+mirroring MLIR's ``PassManager`` / ``mlir-opt`` split.  The manager owns
+an ordered list of registered passes with declared IR levels, checks that
+each pass receives an artifact of its level (a ``tensor`` pass gets a
+``Graph``, a ``loop`` or ``backend`` pass gets a ``Kernel``), re-runs the
+IR verifier between passes, and records per-pass instrumentation (wall
+time, IR-size delta, optional before/after textual dumps).
 
 New passes register with ``@register_pass`` exactly like new ops register
 with ``register_op`` — third parties extend the pipeline without touching
@@ -14,13 +26,20 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Any, Callable, Dict, List, Optional, Union
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 from . import backend_jax, backend_pallas, backend_ref, lowering, schedule
 from .loop_ir import Kernel, LoopKind, MemSpace
 from .tensor_ir import Graph
 
 Artifact = Union[Graph, Kernel, Callable]
+
+LEVELS = ("tensor", "loop", "backend")
+
+
+class PassError(ValueError):
+    """A pass failed or produced IR that does not verify."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,14 +52,42 @@ class PassDef:
 
 PASS_REGISTRY: Dict[str, PassDef] = {}
 
+#: alternate spellings accepted by pipeline specs and the reproc driver
+PASS_ALIASES: Dict[str, str] = {
+    "flatten": "flatten-inner",
+    "fuse": "fuse-epilogue",
+}
+
 
 def register_pass(name: str, level: str, doc: str = ""):
+    """Register ``fn`` as pass ``name`` at IR ``level``.
+
+    ``doc`` defaults to the first line of the function's docstring so the
+    generated pass reference (``reproc --list-passes``) is never empty.
+    """
+    if level not in LEVELS:
+        raise ValueError(f"pass {name!r}: level must be one of {LEVELS}, "
+                         f"got {level!r}")
+
     def deco(fn):
         if name in PASS_REGISTRY:
             raise ValueError(f"pass {name!r} already registered")
-        PASS_REGISTRY[name] = PassDef(name, level, fn, doc)
+        d = doc.strip()
+        if not d:
+            lines = (fn.__doc__ or "").strip().splitlines()
+            d = lines[0].strip() if lines else ""
+        PASS_REGISTRY[name] = PassDef(name, level, fn,
+                                      d or f"(undocumented {level} pass)")
         return fn
     return deco
+
+
+def resolve_pass(name: str) -> PassDef:
+    pd = PASS_REGISTRY.get(PASS_ALIASES.get(name, name))
+    if pd is None:
+        raise KeyError(f"unknown pass {name!r}; "
+                       f"registered: {sorted(PASS_REGISTRY)}")
+    return pd
 
 
 # ---- built-in passes --------------------------------------------------------
@@ -121,7 +168,12 @@ _STAGE_RE = re.compile(r"^([a-zA-Z_][\w\-]*)(?:\{(.*)\})?$")
 
 
 def parse_pipeline(spec: str) -> List[Dict[str, Any]]:
-    """``"lower{tile_m=128},flatten-inner"`` -> [{name, kwargs}, ...]."""
+    """``"lower{tile_m=128},flatten-inner"`` -> [{name, kwargs}, ...].
+
+    Stages separate on ``,`` or ``;`` at brace depth 0 (``;`` matches
+    mlir-opt-style specs on the command line, where ``,`` also separates
+    pass arguments).
+    """
     stages = []
     depth = 0
     token = ""
@@ -131,7 +183,7 @@ def parse_pipeline(spec: str) -> List[Dict[str, Any]]:
             depth += 1
         elif ch == "}":
             depth -= 1
-        if ch == "," and depth == 0:
+        if ch in ",;" and depth == 0:
             parts.append(token)
             token = ""
         else:
@@ -153,30 +205,174 @@ def parse_pipeline(spec: str) -> List[Dict[str, Any]]:
     return stages
 
 
+# ---- pass manager -----------------------------------------------------------
+
+
+def _artifact_size(art: Artifact) -> Optional[int]:
+    from . import ir_text
+    return ir_text.ir_size(art)
+
+
+def _artifact_text(art: Artifact) -> str:
+    from . import ir_text
+    if isinstance(art, (Graph, Kernel)):
+        return ir_text.print_ir(art)
+    return f"<backend artifact {art!r}>"
+
+
+@dataclasses.dataclass
+class PassRecord:
+    """Instrumentation for one executed pass."""
+
+    name: str
+    level: str
+    kwargs: Dict[str, Any]
+    wall_ms: float
+    size_before: Optional[int]
+    size_after: Optional[int]
+    dump_before: Optional[str] = None
+    dump_after: Optional[str] = None
+
+    def summary(self) -> str:
+        def sz(v):
+            return "-" if v is None else str(v)
+        return (f"{self.name:16s} [{self.level:7s}] {self.wall_ms:8.3f} ms  "
+                f"size {sz(self.size_before)} -> {sz(self.size_after)}")
+
+
 @dataclasses.dataclass
 class PipelineResult:
     artifact: Artifact
     trace: List[str]               # pass-by-pass textual IR dumps
+    records: List[PassRecord] = dataclasses.field(default_factory=list)
+
+    def timing_table(self) -> str:
+        return "\n".join(r.summary() for r in self.records)
 
 
-def run_pipeline(graph: Graph, spec: str, dump: bool = False) -> PipelineResult:
+class PassManager:
+    """Ordered, level-checked, verified, instrumented pass pipeline.
+
+    Build programmatically (``add``) or from the string syntax
+    (``PassManager.parse``); ``spec()`` round-trips back to the string
+    form.  ``run`` executes the pipeline on a Graph/Kernel artifact and
+    returns a :class:`PipelineResult` whose ``records`` carry per-pass
+    wall time, IR-size deltas, and (when dumping) before/after IR text.
+    """
+
+    def __init__(self, *, verify: bool = True, dump_after_each: bool = False,
+                 dump_before_each: bool = False):
+        self.verify = verify
+        self.dump_after_each = dump_after_each
+        self.dump_before_each = dump_before_each
+        self._stages: List[Tuple[PassDef, Dict[str, Any]]] = []
+
+    # ---- construction ------------------------------------------------------
+
+    def add(self, pass_: Union[str, PassDef], **kwargs) -> "PassManager":
+        pd = resolve_pass(pass_) if isinstance(pass_, str) else pass_
+        self._stages.append((pd, dict(kwargs)))
+        return self
+
+    @classmethod
+    def parse(cls, spec: str, **opts) -> "PassManager":
+        pm = cls(**opts)
+        for st in parse_pipeline(spec):
+            pm.add(st["name"], **st["kwargs"])
+        return pm
+
+    def spec(self) -> str:
+        """Serialise back to the pipeline-string syntax.
+
+        Bools serialise as 0/1: the string syntax only knows ints and
+        strings, and ``bool("False")`` is True — so ``str(v)`` would not
+        survive a parse round-trip.
+        """
+        parts = []
+        for pd, kwargs in self._stages:
+            if kwargs:
+                kv = ",".join(f"{k}={int(v) if isinstance(v, bool) else v}"
+                              for k, v in kwargs.items())
+                parts.append(f"{pd.name}{{{kv}}}")
+            else:
+                parts.append(pd.name)
+        return ",".join(parts)
+
+    @property
+    def stages(self) -> List[Tuple[PassDef, Dict[str, Any]]]:
+        return list(self._stages)
+
+    # ---- execution ---------------------------------------------------------
+
+    def _check_level(self, pd: PassDef, art: Artifact) -> None:
+        if pd.level == "tensor":
+            want: type = Graph
+        else:                       # "loop" and "backend" consume LoopIR
+            want = Kernel
+        if not isinstance(art, want):
+            have = type(art).__name__
+            raise PassError(
+                f"pass {pd.name!r} is a {pd.level}-level pass and needs a "
+                f"{want.__name__}, but the pipeline artifact is {have} — "
+                f"check pass ordering (backend passes are terminal)")
+
+    def _verify(self, pd: PassDef, art: Artifact, when: str) -> None:
+        if self.verify and isinstance(art, (Graph, Kernel)):
+            try:
+                art.verify()
+            except ValueError as e:
+                raise PassError(f"IR verification failed {when} pass "
+                                f"{pd.name!r}: {e}") from e
+
+    def run(self, artifact: Artifact) -> PipelineResult:
+        art = artifact
+        trace: List[str] = []
+        records: List[PassRecord] = []
+        # textual dumps (trace + PassRecord.dump_*) are only rendered when a
+        # dump flag is set: printing the IR after every pass is O(IR size)
+        # and run() sits on the compile hot path (autotune sweeps it).
+        keep_trace = self.dump_after_each or self.dump_before_each
+        if isinstance(art, (Graph, Kernel)) and self.verify:
+            try:
+                art.verify()
+            except ValueError as e:
+                raise PassError(f"input IR failed verification: {e}") from e
+        if keep_trace:
+            trace.append(f"== input ==\n{_artifact_text(art)}"
+                         if isinstance(art, (Graph, Kernel)) else "== input ==")
+        for pd, kwargs in self._stages:
+            self._check_level(pd, art)
+            size_before = _artifact_size(art)
+            dump_before = (_artifact_text(art)
+                           if self.dump_before_each else None)
+            t0 = time.perf_counter()
+            try:
+                art = pd.fn(art, **kwargs)
+            except PassError:
+                raise
+            except (ValueError, KeyError, TypeError) as e:
+                raise PassError(f"pass {pd.name!r} failed: {e}") from e
+            wall_ms = (time.perf_counter() - t0) * 1e3
+            self._verify(pd, art, "after")
+            dump_after = (_artifact_text(art)
+                          if self.dump_after_each else None)
+            records.append(PassRecord(
+                name=pd.name, level=pd.level, kwargs=dict(kwargs),
+                wall_ms=wall_ms, size_before=size_before,
+                size_after=_artifact_size(art),
+                dump_before=dump_before, dump_after=dump_after))
+            if self.dump_after_each:
+                if isinstance(art, (Graph, Kernel)):
+                    trace.append(f"== after {pd.name} ==\n{dump_after}")
+                else:
+                    trace.append(f"== after {pd.name} == <{pd.level} artifact>")
+        return PipelineResult(art, trace, records)
+
+
+def run_pipeline(graph: Artifact, spec: str, dump: bool = False) -> PipelineResult:
     """The paper's "script": run a declared pass pipeline end to end with
-    verification between stages."""
-    stages = parse_pipeline(spec)
-    art: Artifact = graph
-    trace: List[str] = []
-    if dump:
-        trace.append(f"== input ==\n{graph}")
-    for st in stages:
-        pd = PASS_REGISTRY.get(st["name"])
-        if pd is None:
-            raise KeyError(f"unknown pass {st['name']!r}; "
-                           f"registered: {sorted(PASS_REGISTRY)}")
-        art = pd.fn(art, **st["kwargs"])
-        if isinstance(art, (Graph, Kernel)):
-            art.verify()
-            if dump:
-                trace.append(f"== after {st['name']} ==\n{art}")
-        elif dump:
-            trace.append(f"== after {st['name']} == <{pd.level} artifact>")
-    return PipelineResult(art, trace)
+    verification between stages.  Thin wrapper over :class:`PassManager`
+    kept for the original seed API (``PipelineResult.trace`` only carries
+    dumps when ``dump=True``)."""
+    pm = PassManager.parse(spec, dump_after_each=dump)
+    return pm.run(graph)

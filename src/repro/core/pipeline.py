@@ -20,7 +20,7 @@ from . import backend_jax, backend_pallas, backend_ref, machine_model
 from .frontend import spec, trace
 from .lowering import LoweringOptions, lower_graph
 from .machine_model import TPU_V5E, CycleReport, MachineModel, ResourceReport
-from .passes import run_pipeline
+from .passes import PassManager, PassRecord
 from .tensor_ir import Graph
 
 
@@ -40,6 +40,7 @@ class CompiledKernel:
     run_ref: Callable                  # numpy oracle
     run_jax: Optional[Callable]        # jitted XLA
     run_pallas: Optional[Callable]     # pallas_call (interpret on CPU)
+    pass_records: List[PassRecord] = dataclasses.field(default_factory=list)
 
     def summary(self) -> str:
         return (f"{self.name}[{self.schedule}]: {self.cycles}, "
@@ -78,7 +79,8 @@ def compile_traced(fn_or_graph, in_specs: Optional[Sequence[spec]] = None,
                     else {"m": 128, "n": 128, "k": 128})
     # clamp tiles to the actual problem inside lowering
     pipe = _pipeline_for(schedule, tile)
-    kernel = run_pipeline(graph, pipe).artifact
+    pres = PassManager.parse(pipe).run(graph)
+    kernel = pres.artifact
     cyc = machine_model.cycles(kernel, machine)
     res = machine_model.resources(kernel, machine)
     run_ref = lambda *xs: backend_ref.run(kernel, xs)
@@ -93,7 +95,8 @@ def compile_traced(fn_or_graph, in_specs: Optional[Sequence[spec]] = None,
         name=graph.name, graph=graph, kernel=kernel, schedule=schedule,
         cycles=cyc, resources=res, flops=machine_model.flops(kernel),
         hbm_bytes=machine_model.hbm_bytes(kernel),
-        run_ref=run_ref, run_jax=run_jax, run_pallas=run_pal)
+        run_ref=run_ref, run_jax=run_jax, run_pallas=run_pal,
+        pass_records=pres.records)
 
 
 def compile_gemm(m: int, n: int, k: int, schedule: str = "tpu_mxu",

@@ -1,0 +1,238 @@
+"""``reproc`` — command-line pipeline driver, the stack's ``mlir-opt``.
+
+Run a pass pipeline over textual IR (or a built-in GEMM) and inspect the
+IR after every stage::
+
+    python -m repro.core.reproc --pipeline "lower;flatten" --dump-after-each
+    python -m repro.core.reproc --input kernel.ir --pipeline "grid{vars=2}"
+    python -m repro.core.reproc --gemm 256x128x64 --epilogue bias_relu \
+        --pipeline "lower{tile_m=32,tile_n=32,tile_k=32},fuse-epilogue" --timing
+    python -m repro.core.reproc --list-passes --markdown
+
+Pipeline stages separate on ``;`` or ``,``; stage arguments go in braces
+(``lower{tile_m=128}``).  Without ``--input``, the driver traces the
+quickstart GEMM (``relu(a @ b + bias)``, 64x32x16) as its input module.
+``--list-passes --markdown`` regenerates ``docs/PASSES.md``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List, Optional
+
+from . import frontend as fe
+from . import ir_text
+from .frontend import spec, trace
+from .loop_ir import Kernel
+from .passes import (LEVELS, PASS_ALIASES, PASS_REGISTRY, PassError,
+                     PassManager)
+from .tensor_ir import Graph
+
+
+def quickstart_gemm(m: int = 64, k: int = 32, n: int = 16,
+                    epilogue: str = "bias_relu") -> Graph:
+    """The quickstart's traced GEMM, the driver's default input module."""
+    if epilogue == "bias_relu":
+        def f(a, b, bias):
+            return fe.relu(fe.matmul(a, b) + bias)
+        specs = [spec((m, k)), spec((k, n)), spec((n,))]
+    elif epilogue == "relu":
+        def f(a, b):
+            return fe.relu(fe.matmul(a, b))
+        specs = [spec((m, k)), spec((k, n))]
+    elif epilogue == "none":
+        def f(a, b):
+            return fe.matmul(a, b)
+        specs = [spec((m, k)), spec((k, n))]
+    else:
+        raise ValueError(f"unknown epilogue {epilogue!r}")
+    return trace(f, specs, name=f"gemm_{m}x{n}x{k}_{epilogue}")
+
+
+def passes_markdown() -> str:
+    """The generated pass reference (``docs/PASSES.md``)."""
+    lines = [
+        "# Pass reference",
+        "",
+        "<!-- GENERATED FILE — do not edit by hand. -->",
+        "<!-- Regenerate with:",
+        "       PYTHONPATH=src python -m repro.core.reproc"
+        " --list-passes --markdown > docs/PASSES.md",
+        "     CI fails if this file is out of sync with the registry. -->",
+        "",
+        "Passes registered in `repro.core.passes.PASS_REGISTRY`, grouped by",
+        "the IR level they operate on.  Invoke them through a pipeline spec",
+        "(`PassManager.parse(\"lower{tile_m=128},flatten-inner\")` or",
+        "`python -m repro.core.reproc --pipeline ...`) or programmatically",
+        "(`PassManager().add(\"lower\", tile_m=128)`).",
+        "",
+    ]
+    level_blurb = {
+        "tensor": "Consume **TensorIR** (`Graph`); `lower` produces LoopIR.",
+        "loop": "Transform **LoopIR** (`Kernel`) in place; each re-verifies.",
+        "backend": "Terminal: turn a scheduled `Kernel` into a callable.",
+    }
+    for level in LEVELS:
+        defs = sorted((pd for pd in PASS_REGISTRY.values()
+                       if pd.level == level), key=lambda pd: pd.name)
+        if not defs:
+            continue
+        lines.append(f"## {level}-level passes")
+        lines.append("")
+        lines.append(level_blurb[level])
+        lines.append("")
+        lines.append("| pass | description |")
+        lines.append("|------|-------------|")
+        for pd in defs:
+            lines.append(f"| `{pd.name}` | {pd.doc} |")
+        lines.append("")
+    if PASS_ALIASES:
+        lines.append("## Aliases")
+        lines.append("")
+        lines.append("| alias | pass |")
+        lines.append("|-------|------|")
+        for alias in sorted(PASS_ALIASES):
+            lines.append(f"| `{alias}` | `{PASS_ALIASES[alias]}` |")
+        lines.append("")
+    return "\n".join(lines)
+
+
+def _list_passes_text() -> str:
+    rows = [f"{'PASS':18s} {'LEVEL':8s} DESCRIPTION"]
+    order = {lv: i for i, lv in enumerate(LEVELS)}
+    for pd in sorted(PASS_REGISTRY.values(),
+                     key=lambda pd: (order[pd.level], pd.name)):
+        rows.append(f"{pd.name:18s} {pd.level:8s} {pd.doc}")
+    for alias in sorted(PASS_ALIASES):
+        rows.append(f"{alias:18s} {'alias':8s} -> {PASS_ALIASES[alias]}")
+    return "\n".join(rows)
+
+
+def _load_input(args) -> "ir_text.IR":
+    if args.input:
+        with open(args.input) as f:
+            return ir_text.parse_ir(f.read())
+    m, n, k = 64, 16, 32
+    if args.gemm:
+        try:
+            m, n, k = (int(d) for d in args.gemm.lower().split("x"))
+        except ValueError:
+            raise SystemExit(f"--gemm expects MxNxK, got {args.gemm!r}")
+    return quickstart_gemm(m=m, k=k, n=n, epilogue=args.epilogue)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.core.reproc",
+        description="stagecc pipeline driver (mlir-opt analogue): run a "
+                    "pass pipeline over textual TensorIR/LoopIR and dump "
+                    "the IR at any stage.")
+    p.add_argument("--pipeline", metavar="SPEC", default="",
+                   help="pipeline spec, e.g. 'lower{tile_m=32};flatten' "
+                        "(stages separate on ';' or ',')")
+    p.add_argument("--input", metavar="FILE",
+                   help="textual IR module to start from (stagecc.func or "
+                        "stagecc.kernel); default: the quickstart GEMM")
+    p.add_argument("--gemm", metavar="MxNxK",
+                   help="use an MxNxK GEMM as the input module (default "
+                        "64x16x32, the quickstart shape)")
+    p.add_argument("--epilogue", choices=("none", "relu", "bias_relu"),
+                   default="bias_relu",
+                   help="epilogue for the built-in GEMM input")
+    p.add_argument("--dump-after-each", action="store_true",
+                   help="print the IR (with wall time and size delta) "
+                        "after every pass")
+    p.add_argument("--no-verify", action="store_true",
+                   help="skip inter-pass IR verification")
+    p.add_argument("--timing", action="store_true",
+                   help="print the per-pass timing table")
+    p.add_argument("-o", "--output", metavar="FILE",
+                   help="write the final IR to FILE instead of stdout")
+    p.add_argument("--list-passes", action="store_true",
+                   help="list registered passes and exit")
+    p.add_argument("--markdown", action="store_true",
+                   help="with --list-passes: emit docs/PASSES.md markdown")
+    return p
+
+
+def main(argv: Optional[List[str]] = None, out=None) -> int:
+    args = build_parser().parse_args(argv)
+    close_out = False
+    if out is None:
+        if args.output:
+            out = open(args.output, "w")
+            close_out = True
+        else:
+            out = sys.stdout
+    try:
+        return _run(args, out)
+    except BrokenPipeError:
+        # routine when dump output is piped into head/less; exit quietly
+        # (redirect stdout to devnull so the interpreter's final flush
+        # doesn't print its own traceback)
+        devnull = os.open(os.devnull, os.O_WRONLY)
+        os.dup2(devnull, sys.stdout.fileno())
+        return 0
+    finally:
+        if close_out:
+            out.close()
+
+
+def _run(args, out) -> int:
+
+    if args.markdown and not args.list_passes:
+        print("error: --markdown requires --list-passes", file=sys.stderr)
+        return 2
+    if args.list_passes:
+        print(passes_markdown() if args.markdown else _list_passes_text(),
+              file=out)
+        return 0
+
+    try:
+        art = _load_input(args)
+    except (OSError, TypeError, ValueError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 1
+
+    if not args.pipeline:
+        # no pipeline: act as a round-trip printer (mlir-opt with no passes)
+        print(ir_text.print_ir(art), file=out)
+        return 0
+
+    try:
+        pm = PassManager.parse(args.pipeline, verify=not args.no_verify,
+                               dump_after_each=args.dump_after_each)
+        result = pm.run(art)
+    except (KeyError, ValueError) as e:
+        print(f"error: {e.args[0] if isinstance(e, KeyError) else e}",
+              file=sys.stderr)
+        return 1
+
+    if args.dump_after_each:
+        print(f"// ===== input ({type(art).__name__}, "
+              f"size {ir_text.ir_size(art)}) =====", file=out)
+        print(ir_text.print_ir(art), file=out)
+        for r in result.records:
+            delta = ("" if r.size_after is None or r.size_before is None
+                     else f", size {r.size_before} -> {r.size_after}")
+            print(f"// ===== after {r.name} ({r.level}, "
+                  f"{r.wall_ms:.3f} ms{delta}) =====", file=out)
+            print(r.dump_after, file=out)
+    else:
+        final = result.artifact
+        text = (ir_text.print_ir(final)
+                if isinstance(final, (Graph, Kernel))
+                else f"// backend artifact: {final!r}")
+        print(text, file=out)
+
+    if args.timing:
+        print("// per-pass timing", file=out)
+        for line in result.timing_table().splitlines():
+            print(f"//   {line}", file=out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

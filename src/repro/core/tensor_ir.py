@@ -189,12 +189,8 @@ class Op:
     result: Value
 
     def __str__(self):
-        ins = ", ".join(f"%{v.name}" for v in self.inputs)
-        attrs = ""
-        if self.attrs:
-            kv = ", ".join(f"{k}={v!r}" for k, v in sorted(self.attrs.items()))
-            attrs = " {" + kv + "}"
-        return f"%{self.result.name} = stagecc.{self.opname}({ins}){attrs} : {self.result.type}"
+        from . import ir_text
+        return ir_text.print_op(self)
 
 
 class Graph:
@@ -273,11 +269,7 @@ class Graph:
     # ---- printing ----------------------------------------------------------
 
     def __str__(self):
-        args = ", ".join(str(v) for v in self.inputs)
-        lines = [f"stagecc.func @{self.name}({args}) {{"]
-        for op in self.ops:
-            lines.append(f"  {op}")
-        rets = ", ".join(f"%{v.name}" for v in self.outputs)
-        lines.append(f"  return {rets}")
-        lines.append("}")
-        return "\n".join(lines)
+        # canonical textual form lives in ir_text (it round-trips through
+        # ir_text.parse_graph); delegate so str() and the parser can't drift.
+        from . import ir_text
+        return ir_text.print_graph(self)

@@ -1,0 +1,123 @@
+"""Deterministic fallback for the ``hypothesis`` package.
+
+The container this repo develops in does not ship ``hypothesis`` and new
+dependencies cannot be installed, so ``tests/conftest.py`` installs this
+stub into ``sys.modules`` *only when the real package is missing*.  It
+implements the tiny slice of the API the test-suite uses — ``@given``
+with keyword strategies, ``@settings(max_examples=..., deadline=...)``,
+and the ``integers`` / ``floats`` / ``sampled_from`` / ``booleans``
+strategies — by exhaustively-seeded *deterministic* sampling: every run
+draws the same examples, so failures reproduce.
+
+When real hypothesis is available it is always preferred (the stub does
+no shrinking and no coverage-guided generation).
+"""
+
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+DEFAULT_MAX_EXAMPLES = 20
+_SEED = 0xC0FFEE
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_from(self, rnd: random.Random):
+        return self._draw(rnd)
+
+    def map(self, fn):
+        return _Strategy(lambda rnd: fn(self._draw(rnd)))
+
+    def filter(self, pred):
+        def draw(rnd, _pred=pred):
+            for _ in range(1000):
+                v = self._draw(rnd)
+                if _pred(v):
+                    return v
+            raise ValueError("filter predicate too strict for stub hypothesis")
+        return _Strategy(draw)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def floats(min_value, max_value, **_kw):
+    return _Strategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rnd: rnd.choice(elements))
+
+
+def booleans():
+    return _Strategy(lambda rnd: rnd.choice([False, True]))
+
+
+def just(value):
+    return _Strategy(lambda rnd: value)
+
+
+def lists(elements, min_size=0, max_size=10):
+    return _Strategy(lambda rnd: [elements.example_from(rnd)
+                                  for _ in range(rnd.randint(min_size,
+                                                             max_size))])
+
+
+def given(*arg_strategies, **kw_strategies):
+    if arg_strategies:
+        raise TypeError("stub hypothesis supports keyword strategies only")
+
+    def deco(fn):
+        # Zero-arg wrapper: pytest must not mistake the strategy names for
+        # fixtures, so we deliberately do NOT set __wrapped__ (pytest
+        # follows it when computing the signature).
+        def wrapper():
+            n = getattr(wrapper, "_hyp_max_examples", DEFAULT_MAX_EXAMPLES)
+            rnd = random.Random(_SEED)
+            for i in range(n):
+                kwargs = {k: s.example_from(rnd)
+                          for k, s in kw_strategies.items()}
+                try:
+                    fn(**kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (stub hypothesis, "
+                        f"example {i + 1}/{n}): {kwargs!r}") from e
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._hyp_max_examples = getattr(fn, "_hyp_max_examples",
+                                            DEFAULT_MAX_EXAMPLES)
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+    return deco
+
+
+def settings(max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._hyp_max_examples = max_examples
+        return fn
+    return deco
+
+
+def install() -> None:
+    """Register stub ``hypothesis`` + ``hypothesis.strategies`` modules."""
+    hyp = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "sampled_from", "booleans", "just",
+                 "lists"):
+        setattr(st, name, globals()[name])
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st
+    hyp.__stub__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

@@ -1,0 +1,173 @@
+"""Textual IR round-trip: print -> parse -> print must be a fixpoint at
+both IR levels, and parsing must preserve semantics (the mlir-opt
+property the PassManager and reproc driver build on)."""
+
+import numpy as np
+import pytest
+
+from repro.core import SCHEDULES, backend_ref, compile_gemm
+from repro.core import ir_text
+from repro.core.frontend import spec, trace
+from repro.core.loop_ir import Kernel
+from repro.core.tensor_ir import Graph, TensorType
+import repro.core.frontend as fe
+
+
+def _gemm_graph(m=8, n=8, k=8, epilogue=True):
+    if epilogue:
+        def f(a, b, c):
+            return fe.relu(fe.matmul(a, b) + c)
+        return trace(f, [spec((m, k)), spec((k, n)), spec((n,))])
+    def f(a, b):
+        return fe.matmul(a, b)
+    return trace(f, [spec((m, k)), spec((k, n))])
+
+
+# ---- fixpoint property -----------------------------------------------------
+
+
+@pytest.mark.parametrize("epilogue", [False, True])
+def test_graph_roundtrip_fixpoint(epilogue):
+    g = _gemm_graph(epilogue=epilogue)
+    text = ir_text.print_graph(g)
+    g2 = ir_text.parse_graph(text)
+    assert ir_text.print_graph(g2) == text
+    # and str() is the same canonical form
+    assert str(g) == text
+
+
+@pytest.mark.parametrize("sched", SCHEDULES)
+@pytest.mark.parametrize("epilogue", ["none", "bias_relu"])
+def test_kernel_roundtrip_fixpoint_all_schedules(sched, epilogue):
+    ck = compile_gemm(16, 16, 16, schedule=sched, epilogue=epilogue,
+                      want_jax=False, want_pallas=False)
+    text = ir_text.print_kernel(ck.kernel)
+    k2 = ir_text.parse_kernel(text)
+    assert ir_text.print_kernel(k2) == text
+    assert str(ck.kernel) == text
+
+
+@pytest.mark.parametrize("sched", SCHEDULES)
+def test_parsed_kernel_preserves_semantics(sched):
+    ck = compile_gemm(8, 8, 8, schedule=sched, epilogue="bias_relu",
+                      want_jax=False, want_pallas=False)
+    k2 = ir_text.parse_kernel(ir_text.print_kernel(ck.kernel))
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((8, 8)).astype(np.float32)
+    b = rng.standard_normal((8, 8)).astype(np.float32)
+    c = rng.standard_normal((8,)).astype(np.float32)
+    want = np.asarray(ck.run_ref(a, b, c)[-1])
+    got = np.asarray(backend_ref.run(k2, [a, b, c])[-1])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_attr_ops_roundtrip():
+    g = Graph("attrs")
+    a = g.add_input("a", TensorType((4, 8)))
+    t = g.emit("transpose", [a], perm=(1, 0))
+    c = g.emit("cast", [t], dtype="bfloat16")
+    g.set_outputs(c)
+    text = ir_text.print_graph(g)
+    assert "{perm=(1, 0)}" in text
+    assert "{dtype='bfloat16'}" in text
+    assert ir_text.print_graph(ir_text.parse_graph(text)) == text
+
+
+def test_split_pass_affine_exprs_roundtrip():
+    """split introduces multi-term affine indices (stride*var+var)."""
+    from repro.core import PassManager
+    k = PassManager.parse("lower{tile_m=2,tile_n=2,tile_k=2},split{var=i1,factor=2}") \
+        .run(_gemm_graph(epilogue=False)).artifact
+    text = ir_text.print_kernel(k)
+    assert "2*i1_o+i1_i" in text
+    assert ir_text.print_kernel(ir_text.parse_kernel(text)) == text
+
+
+def test_rank0_scalar_kernel_roundtrip():
+    """Rank-0 buffers print as 'buf[ : ]' (empty index/tile) and must
+    still round-trip."""
+    from repro.core import lower_graph
+    g = trace(lambda s: fe.relu(s), [spec(())])
+    k = lower_graph(g)
+    text = ir_text.print_kernel(k)
+    assert "[ : ]" in text
+    assert ir_text.print_kernel(ir_text.parse_kernel(text)) == text
+
+
+def test_parse_rejects_ssa_redefinition():
+    text = ("stagecc.func @f(%a: tensor<4x4xfloat32>) {\n"
+            "  %x = stagecc.relu(%a) : tensor<4x4xfloat32>\n"
+            "  %x = stagecc.neg(%a) : tensor<4x4xfloat32>\n"
+            "  return %x\n}")
+    with pytest.raises(ir_text.IRParseError, match="redefinition"):
+        ir_text.parse_graph(text)
+
+
+def test_parse_ir_dispatch():
+    g = _gemm_graph(epilogue=False)
+    assert isinstance(ir_text.parse_ir(str(g)), Graph)
+    ck = compile_gemm(8, 8, 8, want_jax=False, want_pallas=False)
+    assert isinstance(ir_text.parse_ir(str(ck.kernel)), Kernel)
+    with pytest.raises(ValueError):
+        ir_text.parse_ir("not an ir module")
+    with pytest.raises(ValueError):
+        ir_text.parse_ir("")
+
+
+# ---- parser diagnostics ----------------------------------------------------
+
+
+def test_parse_rejects_bad_header():
+    with pytest.raises(ir_text.IRParseError):
+        ir_text.parse_graph("stagecc.func gemm() {\n return \n}")
+
+
+def test_parse_rejects_undefined_value():
+    text = ("stagecc.func @f(%a: tensor<4x4xfloat32>) {\n"
+            "  %r = stagecc.relu(%missing) : tensor<4x4xfloat32>\n"
+            "  return %r\n}")
+    with pytest.raises(ir_text.IRParseError, match="undefined"):
+        ir_text.parse_graph(text)
+
+
+def test_parse_rejects_type_mismatch():
+    text = ("stagecc.func @f(%a: tensor<4x4xfloat32>) {\n"
+            "  %r = stagecc.relu(%a) : tensor<2x2xfloat32>\n"
+            "  return %r\n}")
+    with pytest.raises(ir_text.IRParseError, match="declared type"):
+        ir_text.parse_graph(text)
+
+
+def test_parse_rejects_unknown_op():
+    text = ("stagecc.func @f(%a: tensor<4x4xfloat32>) {\n"
+            "  %r = stagecc.frobnicate(%a) : tensor<4x4xfloat32>\n"
+            "  return %r\n}")
+    with pytest.raises(ir_text.IRParseError, match="frobnicate"):
+        ir_text.parse_graph(text)
+
+
+def test_parse_rejects_unknown_buffer_and_unclosed_block():
+    ck = compile_gemm(8, 8, 8, want_jax=False, want_pallas=False)
+    text = str(ck.kernel)
+    with pytest.raises(ir_text.IRParseError, match="unknown buffer"):
+        ir_text.parse_kernel(text.replace("arg0[", "ghost["))
+    with pytest.raises(ir_text.IRParseError, match="unclosed"):
+        ir_text.parse_kernel(text.rstrip().rstrip("}"))
+
+
+def test_parse_type():
+    assert ir_text.parse_type("tensor<64x32xfloat32>") == TensorType((64, 32))
+    assert ir_text.parse_type("tensor<8xbfloat16>") == TensorType((8,), "bfloat16")
+    assert ir_text.parse_type("tensor<float32>") == TensorType(())
+    with pytest.raises(ValueError):
+        ir_text.parse_type("tensor<axbxfloat32>")
+    with pytest.raises(ValueError):
+        ir_text.parse_type("vector<4xfloat32>")
+
+
+def test_ir_size_metric():
+    g = _gemm_graph()
+    assert ir_text.ir_size(g) == len(g.ops) == 3
+    ck = compile_gemm(8, 8, 8, want_jax=False, want_pallas=False)
+    assert ir_text.ir_size(ck.kernel) == sum(1 for _ in ck.kernel.walk())
+    assert ir_text.ir_size(lambda: None) is None

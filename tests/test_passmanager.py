@@ -1,0 +1,298 @@
+"""PassManager: level checking, inter-pass verification, instrumentation,
+string-spec round-trip, and the reproc CLI driver."""
+
+import io
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (PASS_REGISTRY, PassError, PassManager, compile_gemm,
+                        register_pass, run_pipeline)
+from repro.core import reproc
+from repro.core.frontend import spec, trace
+from repro.core.loop_ir import (AffineExpr, Buffer, Kernel, Loop, LoopKind,
+                                LoopVar, MemSpace, TileRef, ZeroTile)
+from repro.core.passes import parse_pipeline, resolve_pass
+from repro.core.tensor_ir import TensorType
+import repro.core.frontend as fe
+
+DOCS = os.path.join(os.path.dirname(__file__), "..", "docs")
+
+# snapshot at import, before any test-only register_pass() calls below run,
+# so docs-sync comparisons see exactly the built-in registry
+_CLEAN_MD = reproc.passes_markdown()
+_BUILTIN_PASSES = {name: pd.doc for name, pd in PASS_REGISTRY.items()}
+
+
+def _gemm_graph(m=8, n=8, k=8):
+    def f(a, b):
+        return fe.matmul(a, b)
+    return trace(f, [spec((m, k)), spec((k, n))])
+
+
+# ---- construction ----------------------------------------------------------
+
+
+def test_programmatic_equals_string_spec():
+    g = _gemm_graph()
+    r1 = (PassManager().add("lower", tile_m=2, tile_n=2, tile_k=2)
+          .add("flatten-inner").run(g))
+    g2 = _gemm_graph()
+    r2 = PassManager.parse("lower{tile_m=2,tile_n=2,tile_k=2},flatten-inner") \
+        .run(g2)
+    assert str(r1.artifact) == str(r2.artifact)
+
+
+def test_spec_roundtrip():
+    s = "lower{tile_m=2,tile_n=2,tile_k=2},flatten-inner"
+    pm = PassManager.parse(s)
+    assert pm.spec() == s
+    assert PassManager.parse(pm.spec()).spec() == s
+
+
+def test_spec_roundtrip_preserves_bool_kwargs():
+    """bool("False") is True — spec() must serialise bools as 0/1 so the
+    re-parsed pipeline is semantically identical."""
+    pm = PassManager().add("lower", tile_m=4, tile_n=4, tile_k=4,
+                           use_accumulator=False)
+    k1 = pm.run(_gemm_graph()).artifact
+    k2 = PassManager.parse(pm.spec()).run(_gemm_graph()).artifact
+    assert [b.name for b in k1.scratch] == [b.name for b in k2.scratch] == []
+
+
+def test_run_does_not_render_dumps_unless_asked():
+    """Textual IR dumps are hot-path overhead; without a dump flag the
+    trace stays empty and records carry no dump text."""
+    r = PassManager.parse("lower").run(_gemm_graph())
+    assert r.trace == []
+    assert r.records[0].dump_before is None
+    assert r.records[0].dump_after is None
+
+
+def test_semicolon_separator_and_aliases():
+    stages = parse_pipeline("lower{tile_m=4,tile_n=4,tile_k=4};flatten")
+    assert [s["name"] for s in stages] == ["lower", "flatten"]
+    assert resolve_pass("flatten").name == "flatten-inner"
+    assert resolve_pass("fuse").name == "fuse-epilogue"
+    r = PassManager.parse("lower{tile_m=4,tile_n=4,tile_k=4};flatten") \
+        .run(_gemm_graph())
+    assert [rec.name for rec in r.records] == ["lower", "flatten-inner"]
+
+
+def test_unknown_pass_raises_keyerror():
+    with pytest.raises(KeyError):
+        run_pipeline(_gemm_graph(4, 4, 4), "nonexistent-pass")
+    with pytest.raises(KeyError):
+        PassManager().add("nonexistent-pass")
+
+
+# ---- level checking --------------------------------------------------------
+
+
+def test_loop_pass_rejects_tensor_artifact():
+    with pytest.raises(PassError, match="loop-level pass"):
+        PassManager.parse("flatten-inner").run(_gemm_graph())
+
+
+def test_tensor_pass_rejects_loop_artifact():
+    with pytest.raises(PassError, match="tensor-level pass"):
+        PassManager.parse("lower,lower").run(_gemm_graph())
+
+
+def test_backend_passes_are_terminal():
+    with pytest.raises(PassError, match="terminal"):
+        PassManager.parse("lower,emit-ref,flatten-inner").run(_gemm_graph())
+
+
+# ---- instrumentation -------------------------------------------------------
+
+
+def test_records_capture_time_and_size():
+    r = PassManager.parse("lower{tile_m=2,tile_n=2,tile_k=2},flatten-inner") \
+        .run(_gemm_graph())
+    assert [rec.name for rec in r.records] == ["lower", "flatten-inner"]
+    lower = r.records[0]
+    assert lower.level == "tensor"
+    assert lower.kwargs == {"tile_m": 2, "tile_n": 2, "tile_k": 2}
+    assert lower.wall_ms >= 0
+    assert lower.size_before == 1           # one matmul op
+    assert lower.size_after > lower.size_before
+    assert "lower" in r.timing_table()
+    # flatten-inner only re-tags a loop: size is conserved
+    assert r.records[1].size_before == r.records[1].size_after
+
+
+def test_dump_after_each_records_ir_text():
+    r = PassManager.parse("lower", dump_after_each=True).run(_gemm_graph())
+    assert r.records[0].dump_after.startswith("stagecc.kernel @")
+    assert r.records[0].dump_before is None
+    r2 = PassManager.parse("lower", dump_before_each=True).run(_gemm_graph())
+    assert r2.records[0].dump_before.startswith("stagecc.func @")
+
+
+def test_compiled_kernel_carries_pass_records():
+    ck = compile_gemm(8, 8, 8, schedule="tpu_mxu", want_jax=False,
+                      want_pallas=False)
+    assert [r.name for r in ck.pass_records] == ["lower", "fuse-epilogue",
+                                                 "grid"]
+
+
+def test_run_pipeline_trace_backward_compat():
+    assert run_pipeline(_gemm_graph(), "lower").trace == []
+    t = run_pipeline(_gemm_graph(), "lower", dump=True).trace
+    assert len(t) == 2 and t[0].startswith("== input ==")
+    assert t[1].startswith("== after lower ==")
+
+
+# ---- verification ----------------------------------------------------------
+
+
+def _valid_kernel():
+    a = Buffer("a", TensorType((4, 4)))
+    i = LoopVar("i", 4)
+    body = [Loop(i, LoopKind.SEQUENTIAL,
+                 [ZeroTile(TileRef(a, (AffineExpr.of(i), AffineExpr.of(None)),
+                                   (1, 4)))])]
+    return Kernel("k", params=[a], outputs=[a], scratch=[], body=body)
+
+
+def test_verifier_accepts_wellformed():
+    _valid_kernel().verify()
+
+
+def test_verifier_rejects_duplicate_buffer_names():
+    a = Buffer("a", TensorType((4, 4)))
+    dup = Kernel("k", params=[a, Buffer("a", TensorType((2, 2)))],
+                 outputs=[a], scratch=[], body=[])
+    with pytest.raises(ValueError, match="duplicate buffer"):
+        dup.verify()
+
+
+def test_verifier_rejects_unbound_loop_var():
+    a = Buffer("a", TensorType((4, 4)))
+    ghost = LoopVar("ghost", 4)
+    bad = Kernel("k", params=[a], outputs=[a], scratch=[],
+                 body=[ZeroTile(TileRef(a, (AffineExpr.of(ghost),
+                                            AffineExpr.of(None)), (1, 4)))])
+    with pytest.raises(ValueError, match="unbound loop var"):
+        bad.verify()
+
+
+def test_verifier_rejects_hbm_scratch_and_nonparam_output():
+    a = Buffer("a", TensorType((4, 4)))
+    with pytest.raises(ValueError, match="HBM"):
+        Kernel("k", params=[a], outputs=[a],
+               scratch=[Buffer("s", TensorType((2, 2)), MemSpace.HBM)],
+               body=[]).verify()
+    with pytest.raises(ValueError, match="not a param"):
+        Kernel("k", params=[a],
+               outputs=[Buffer("o", TensorType((4, 4)))], scratch=[],
+               body=[]).verify()
+
+
+def test_passmanager_flags_pass_that_breaks_invariants():
+    """A buggy pass whose output kernel fails verification is caught by the
+    manager and attributed to the pass."""
+    if "break-kernel" not in PASS_REGISTRY:
+        @register_pass("break-kernel", "loop", "test-only: corrupt the kernel")
+        def _break(k):
+            k.scratch.append(Buffer("evil", TensorType((2, 2)), MemSpace.HBM))
+            return k
+
+    with pytest.raises(PassError, match="break-kernel"):
+        PassManager.parse("lower,break-kernel").run(_gemm_graph())
+    # without verification the corruption sails through (mlir-opt's
+    # -verify-each=false): same pipeline, no error
+    r = PassManager.parse("lower,break-kernel", verify=False).run(_gemm_graph())
+    assert any(b.name == "evil" for b in r.artifact.scratch)
+
+
+def test_register_pass_doc_defaults_to_docstring():
+    if "docdemo" not in PASS_REGISTRY:
+        @register_pass("docdemo", "loop")
+        def _docdemo(k):
+            """One-line summary used as the pass doc.
+
+            Longer body that must not leak into the registry doc.
+            """
+            return k
+    assert PASS_REGISTRY["docdemo"].doc == \
+        "One-line summary used as the pass doc."
+    assert all(pd.doc for pd in PASS_REGISTRY.values())
+
+
+# ---- reproc CLI ------------------------------------------------------------
+
+
+def _run_cli(argv):
+    out = io.StringIO()
+    rc = reproc.main(argv, out=out)
+    return rc, out.getvalue()
+
+
+def test_cli_acceptance_pipeline_dumps():
+    """python -m repro.core.reproc --pipeline "lower;flatten"
+    --dump-after-each emits per-pass timed IR dumps on the quickstart GEMM."""
+    rc, out = _run_cli(["--pipeline", "lower;flatten", "--dump-after-each"])
+    assert rc == 0
+    assert "// ===== after lower (tensor," in out
+    assert "// ===== after flatten-inner (loop," in out
+    assert "ms" in out and "stagecc.kernel @" in out
+
+
+def test_cli_roundtrip_printer_mode(tmp_path):
+    rc, printed = _run_cli(["--gemm", "16x16x16", "--epilogue", "none"])
+    assert rc == 0
+    f = tmp_path / "m.ir"
+    f.write_text(printed)
+    rc2, reprinted = _run_cli(["--input", str(f)])
+    assert rc2 == 0 and reprinted == printed
+
+
+def test_cli_runs_pipeline_from_ir_file(tmp_path):
+    rc, printed = _run_cli(["--gemm", "8x8x8", "--epilogue", "none",
+                            "--pipeline", "lower{tile_m=4,tile_n=4,tile_k=4}"])
+    assert rc == 0 and printed.startswith("stagecc.kernel @")
+    f = tmp_path / "k.ir"
+    f.write_text(printed)
+    rc2, out = _run_cli(["--input", str(f), "--pipeline", "grid{vars=2}",
+                         "--timing"])
+    assert rc2 == 0
+    assert "@grid" in out and "// per-pass timing" in out
+
+
+def test_cli_errors_are_diagnosed():
+    rc, _ = _run_cli(["--pipeline", "no-such-pass"])
+    assert rc == 1
+    rc, _ = _run_cli(["--input", "/nonexistent/file.ir"])
+    assert rc == 1
+    # zero dims raise TypeError inside tracing; must be a diagnostic, not
+    # a traceback
+    rc, _ = _run_cli(["--gemm", "0x16x32", "--pipeline", "lower"])
+    assert rc == 1
+
+
+def test_cli_list_passes_text():
+    rc, out = _run_cli(["--list-passes"])
+    assert rc == 0
+    for name in ("lower", "flatten-inner", "grid", "emit-pallas"):
+        assert name in out
+    assert "-> flatten-inner" in out        # alias table
+
+
+def test_docs_passes_md_in_sync():
+    """docs/PASSES.md is generated from the registry; CI and this test fail
+    if it goes stale.  Regenerate with:
+        PYTHONPATH=src python -m repro.core.reproc --list-passes --markdown \
+            > docs/PASSES.md
+    """
+    with open(os.path.join(DOCS, "PASSES.md")) as f:
+        on_disk = f.read()
+    assert on_disk.rstrip("\n") == _CLEAN_MD.rstrip("\n")
+
+
+def test_markdown_reference_covers_all_builtin_passes():
+    for name, doc in _BUILTIN_PASSES.items():
+        assert f"`{name}`" in _CLEAN_MD
+        assert doc in _CLEAN_MD
