@@ -1,0 +1,21 @@
+# Convenience targets; everything runs in place with PYTHONPATH=src.
+
+PY := PYTHONPATH=src python
+
+.PHONY: test docs docs-check
+
+test:
+	$(PY) -m pytest -x -q
+
+# regenerate the generated docs (docs/PASSES.md from the pass registry,
+# docs/LOWERING.md from live reproc output)
+docs:
+	$(PY) -m repro.core.reproc --list-passes --markdown > docs/PASSES.md
+	$(PY) scripts/gen_lowering_md.py > docs/LOWERING.md
+
+# CI gate: fail if either generated doc drifts from compiler output
+docs-check:
+	$(PY) -m repro.core.reproc --list-passes --markdown > /tmp/PASSES.md.gen
+	diff -u docs/PASSES.md /tmp/PASSES.md.gen
+	$(PY) scripts/gen_lowering_md.py > /tmp/LOWERING.md.gen
+	diff -u docs/LOWERING.md /tmp/LOWERING.md.gen

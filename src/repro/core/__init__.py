@@ -2,17 +2,22 @@
 
 Levels (Fig. 1 of the paper):
     frontend (SYCL/DPC++ role)  ->  TensorIR (MLIR role)
-        ->  LoopIR (Calyx role)  ->  backends (RTL-emission role)
-with cycle/resource models standing in for Vivado simulation/synthesis.
+        ->  LoopIR (Calyx role)  ->  HwIR (FSM + datapath, the RTL role)
+        ->  backends (executable emission) + Verilog-style text
+with cycle/resource models derived structurally from the HwIR module
+(the Vivado-report role).
 
-See docs/ARCHITECTURE.md for the stage-by-stage map and
-docs/PASSES.md (generated) for the pass reference.
+See docs/ARCHITECTURE.md for the stage-by-stage map,
+docs/LOWERING.md (generated) for one GEMM walked through every level,
+and docs/PASSES.md (generated) for the pass reference.
 """
 
 from .autotune import best_schedule, compile_gemm_autotuned
 from .frontend import spec, trace
-from .ir_text import (ir_size, parse_graph, parse_ir, parse_kernel,
-                      print_graph, print_ir, print_kernel)
+from .hw_ir import HwModule, emit_verilog, lower_to_hw
+from .ir_text import (ir_size, parse_graph, parse_hw_module, parse_ir,
+                      parse_kernel, print_graph, print_hw_module, print_ir,
+                      print_kernel)
 from .lowering import LoweringOptions, lower_graph
 from .machine_model import TPU_V5E, MachineModel, cycles, flops, hbm_bytes, resources
 from .passes import (PASS_ALIASES, PASS_REGISTRY, PassDef, PassError,
@@ -27,8 +32,9 @@ __all__ = [
     "PASS_ALIASES", "PASS_REGISTRY", "PassDef", "PassError", "PassManager",
     "PassRecord", "PipelineResult", "parse_pipeline", "register_pass",
     "run_pipeline",
-    "ir_size", "parse_graph", "parse_ir", "parse_kernel",
-    "print_graph", "print_ir", "print_kernel",
+    "HwModule", "emit_verilog", "lower_to_hw",
+    "ir_size", "parse_graph", "parse_hw_module", "parse_ir", "parse_kernel",
+    "print_graph", "print_hw_module", "print_ir", "print_kernel",
     "SCHEDULES", "CompiledKernel", "compile_gemm", "compile_traced",
     "Graph", "OP_REGISTRY", "TensorType", "register_op",
 ]

@@ -3,13 +3,14 @@
 MLIR's reusability story rests on every level of IR having a canonical
 textual form that parses back to an identical module — pipelines can then
 be debugged, diffed, golden-tested, and driven from the command line at
-any stage.  This module gives TensorIR (``Graph``) and LoopIR
-(``Kernel``) that property:
+any stage.  This module gives TensorIR (``Graph``), LoopIR (``Kernel``)
+and HwIR (``HwModule``) that property:
 
     print_ir(parse_ir(print_ir(x))) == print_ir(x)
 
-``print_graph``/``print_kernel`` are the single source of truth for the
-textual form; ``Graph.__str__`` and ``Kernel.__str__`` delegate here.
+``print_graph``/``print_kernel``/``print_hw_module`` are the single
+source of truth for the textual form; the ``__str__`` of each IR class
+delegates here.
 
 Grammar (by example)::
 
@@ -30,6 +31,17 @@ Grammar (by example)::
       }
     }
 
+    stagecc.hw @gemm {
+      port in arg0: float32[64x32] @hbm
+      reg acc1: float32[16x16]
+      unit mxu1: mxu<16x16> x1
+      ctrl {
+        loop %i1 [4] @fsm {
+          step matmul mxu1(acc acc1[16x16], read arg0[16x16], read arg1[16x16])
+        }
+      }
+    }
+
 The parser re-runs type inference on every TensorIR op and ``verify()``
 on every parsed artifact, so a hand-edited IR file gets the same
 diagnostics a pass-produced one would.
@@ -41,11 +53,13 @@ import ast
 import re
 from typing import Dict, List, Optional, Tuple, Union
 
+from .hw_ir import (HwCtrl, HwLoop, HwMem, HwModule, HwOperand, HwPort, HwReg,
+                    HwStep, HwUnit, LOOP_CTRL_KINDS)
 from .loop_ir import (AffineExpr, Buffer, EwiseTile, Kernel, Loop, LoopKind,
                       LoopVar, MatmulTile, MemSpace, Stmt, TileRef, ZeroTile)
 from .tensor_ir import Graph, TensorType
 
-IR = Union[Graph, Kernel]
+IR = Union[Graph, Kernel, HwModule]
 
 
 class IRParseError(ValueError):
@@ -133,15 +147,65 @@ def print_stmt(s: Stmt) -> List[str]:
     raise TypeError(f"unknown stmt {type(s).__name__}")
 
 
+# ---- HwIR printing ---------------------------------------------------------
+
+
+def _print_shape(shape) -> str:
+    return "x".join(str(d) for d in shape)
+
+
+def print_hw_operand(o: HwOperand) -> str:
+    return f"{o.role} {o.target}[{_print_shape(o.tile)}]"
+
+
+def print_hw_ctrl(node: HwCtrl) -> List[str]:
+    if isinstance(node, HwStep):
+        opnds = ", ".join(print_hw_operand(o) for o in node.operands)
+        return [f"step {node.op} {node.unit}({opnds})"]
+    if isinstance(node, HwLoop):
+        lines = [f"loop %{node.counter} [{node.trips}] @{node.kind} {{"]
+        for inner in node.body:
+            lines.extend("  " + line for line in print_hw_ctrl(inner))
+        lines.append("}")
+        return lines
+    raise TypeError(f"unknown control node {type(node).__name__}")
+
+
+def print_hw_module(m: HwModule) -> str:
+    lines = [f"stagecc.hw @{m.name} {{"]
+    for p in m.ports:
+        lines.append(f"  port {p.direction} {p.name}: "
+                     f"{p.dtype}[{_print_shape(p.shape)}] @hbm")
+    for r in m.regs:
+        lines.append(f"  reg {r.name}: {r.dtype}[{_print_shape(r.shape)}]")
+    for mm in m.mems:
+        lines.append(f"  mem {mm.name}: "
+                     f"{mm.dtype}[{_print_shape(mm.shape)}] @vmem")
+    for u in m.units:
+        lines.append(f"  unit {u.name}: {u.kind}<{_print_shape(u.geometry)}>"
+                     f" x{u.copies}")
+    lines.append("  ctrl {")
+    for node in m.ctrl:
+        lines.extend("    " + line for line in print_hw_ctrl(node))
+    lines.append("  }")
+    lines.append("}")
+    return "\n".join(lines)
+
+
 def print_ir(x: IR) -> str:
-    return print_graph(x) if isinstance(x, Graph) else print_kernel(x)
+    if isinstance(x, Graph):
+        return print_graph(x)
+    if isinstance(x, HwModule):
+        return print_hw_module(x)
+    return print_kernel(x)
 
 
 def ir_size(x) -> Optional[int]:
-    """IR size metric for instrumentation: ops (Graph) / stmts (Kernel)."""
+    """IR size metric for instrumentation: ops (Graph) / stmts (Kernel) /
+    control nodes (HwModule)."""
     if isinstance(x, Graph):
         return len(x.ops)
-    if isinstance(x, Kernel):
+    if isinstance(x, (Kernel, HwModule)):
         return sum(1 for _ in x.walk())
     return None
 
@@ -410,9 +474,119 @@ def parse_kernel(text: str) -> Kernel:
     return k
 
 
+# --------------------------------------------------------------------------
+# HwIR parser
+# --------------------------------------------------------------------------
+
+_HW_RE = re.compile(r"^stagecc\.hw @([\w.\-]+) \{$")
+_HW_PORT_RE = re.compile(r"^port (inout|in|out) (\w+): (\w+)\[([\dx]*)\] @hbm$")
+_HW_REG_RE = re.compile(r"^reg (\w+): (\w+)\[([\dx]*)\]$")
+_HW_MEM_RE = re.compile(r"^mem (\w+): (\w+)\[([\dx]*)\] @vmem$")
+_HW_UNIT_RE = re.compile(r"^unit (\w+): (\w+)<([\dx]*)> x(\d+)$")
+_HW_LOOP_RE = re.compile(r"^loop %(\w+) \[(\d+)\] @(\w+) \{$")
+_HW_STEP_RE = re.compile(r"^step ([\w.]+) (\w+)\((.*)\)$")
+_HW_OPERAND_RE = re.compile(r"^(read|write|acc) (\w+)\[([\dx]*)\]$")
+
+
+def _parse_shape(s: str) -> Tuple[int, ...]:
+    return tuple(int(d) for d in s.split("x") if d)
+
+
+def parse_hw_module(text: str) -> HwModule:
+    lines = [(i + 1, ln.strip()) for i, ln in enumerate(text.splitlines())
+             if ln.strip()]
+    if not lines:
+        raise ValueError("empty HwIR module")
+    lineno, head = lines[0]
+    m = _HW_RE.match(head)
+    if not m:
+        raise IRParseError(lineno, head, "expected 'stagecc.hw @name {'")
+    mod = HwModule(name=m.group(1), ports=[], regs=[], mems=[], units=[],
+                   ctrl=[])
+    pos = 1
+
+    # declarations, in canonical order (ports, regs, mems, units)
+    while pos < len(lines):
+        lineno, ln = lines[pos]
+        if (p := _HW_PORT_RE.match(ln)):
+            direction, name, dtype, shape = p.groups()
+            mod.ports.append(HwPort(name, direction, dtype,
+                                    _parse_shape(shape)))
+        elif (r := _HW_REG_RE.match(ln)):
+            name, dtype, shape = r.groups()
+            mod.regs.append(HwReg(name, dtype, _parse_shape(shape)))
+        elif (mm := _HW_MEM_RE.match(ln)):
+            name, dtype, shape = mm.groups()
+            mod.mems.append(HwMem(name, dtype, _parse_shape(shape)))
+        elif (u := _HW_UNIT_RE.match(ln)):
+            name, kind, geo, copies = u.groups()
+            try:
+                mod.units.append(HwUnit(name, kind, _parse_shape(geo),
+                                        int(copies)))
+            except ValueError as e:
+                raise IRParseError(lineno, ln, str(e))
+        else:
+            break
+        pos += 1
+
+    if pos >= len(lines) or lines[pos][1] != "ctrl {":
+        lineno, ln = lines[min(pos, len(lines) - 1)]
+        raise IRParseError(lineno, ln, "expected declaration or 'ctrl {'")
+    pos += 1
+
+    def parse_step(lineno: int, ln: str) -> HwStep:
+        s = _HW_STEP_RE.match(ln)
+        if not s:
+            raise IRParseError(lineno, ln, "expected 'step', 'loop', or '}'")
+        op, unit, args = s.groups()
+        operands = []
+        for part in _split_top(args):
+            o = _HW_OPERAND_RE.match(part)
+            if not o:
+                raise IRParseError(lineno, ln, f"bad operand {part!r}")
+            role, target, tile = o.groups()
+            operands.append(HwOperand(role, target, _parse_shape(tile)))
+        return HwStep(op, unit, operands)
+
+    def parse_block() -> List[HwCtrl]:
+        nonlocal pos
+        nodes: List[HwCtrl] = []
+        while pos < len(lines):
+            lineno, ln = lines[pos]
+            if ln == "}":
+                pos += 1
+                return nodes
+            f = _HW_LOOP_RE.match(ln)
+            if f:
+                counter, trips, kind = f.groups()
+                if kind not in LOOP_CTRL_KINDS:
+                    raise IRParseError(lineno, ln,
+                                       f"unknown loop kind @{kind}")
+                pos += 1
+                nodes.append(HwLoop(counter, int(trips), kind, parse_block()))
+                continue
+            nodes.append(parse_step(lineno, ln))
+            pos += 1
+        raise IRParseError(lines[-1][0], lines[-1][1], "unclosed block")
+
+    mod.ctrl = parse_block()
+    if pos >= len(lines) or lines[pos][1] != "}":
+        lineno, ln = lines[min(pos, len(lines) - 1)]
+        raise IRParseError(lineno, ln, "expected closing '}' of module")
+    pos += 1
+    if pos < len(lines):
+        lineno, ln = lines[pos]
+        raise IRParseError(lineno, ln, "trailing input after module")
+    try:
+        mod.verify()
+    except KeyError as e:
+        raise ValueError(f"module @{mod.name} does not verify: {e.args[0]}")
+    return mod
+
+
 def parse_ir(text: str) -> IR:
     """Parse a textual module, dispatching on ``stagecc.func`` vs
-    ``stagecc.kernel``."""
+    ``stagecc.kernel`` vs ``stagecc.hw``."""
     for ln in text.splitlines():
         ln = ln.strip()
         if not ln:
@@ -421,5 +595,7 @@ def parse_ir(text: str) -> IR:
             return parse_graph(text)
         if ln.startswith("stagecc.kernel"):
             return parse_kernel(text)
+        if ln.startswith("stagecc.hw"):
+            return parse_hw_module(text)
         raise ValueError(f"unrecognised module header: {ln!r}")
     raise ValueError("empty IR module")

@@ -1,36 +1,52 @@
-"""Machine description + analytic cycle/resource models for scheduled LoopIR.
+"""Machine description + structural cycle/resource models over HwIR.
 
-This is the Vivado-simulation analogue of the paper: the paper reports
-consumed clock cycles (TABLE I) and hardware utilisation (Fig. 3) of the
-RTL generated from each schedule.  We have no RTL flow on TPU, so the
-models below walk the *scheduled LoopIR* and produce:
+The paper reports consumed clock cycles (TABLE I) and hardware
+utilisation (Fig. 3) of the RTL generated from each schedule.  Since
+PR 2 the reproduction has that hardware level: scheduled LoopIR lowers
+to :class:`~repro.core.hw_ir.HwModule` (FSM + datapath), and the models
+below walk the *hardware structure* — FSM states and loop sequencers,
+datapath units and their spatial copies, register banks and RAMs —
+rather than re-deriving costs from LoopIR heuristics:
 
-  * ``cycles(kernel)``    — consumed clock cycles under a simple in-order
-    issue model of one TPU v5e core (TABLE I analogue);
-  * ``resources(kernel)`` — spatial resource consumption: concurrently-
-    live compute lanes (DSP analogue), VMEM bytes (BRAM analogue) and
-    VREG tiles (FF/LUT analogue) (Fig. 3 analogue).
+  * ``cycles(hw)``    — consumed clock cycles of the module's schedule:
+    each FSM-sequenced loop pays a state transition per trip, each
+    datapath invocation pays its unit's latency, and memory-port traffic
+    is priced per port class (TABLE I analogue);
+  * ``resources(hw)`` — spatial consumption read off the module: peak
+    datapath lanes (DSP analogue), RAM bytes (BRAM analogue), live
+    register tiles plus FSM/counter register bits (FF/LUT analogue),
+    and the flattened FSM state count (Fig. 3 analogue).
 
-The model intentionally reproduces the paper's *mechanism*:
+Both accept a scheduled LoopIR ``Kernel`` for convenience and lower it
+to hardware first — the accounting itself only ever sees the HwModule.
 
-  * a SEQUENTIAL loop is time-division multiplexing — one datapath,
-    control overhead paid every iteration (Calyx emits an FSM step per
-    control transition; TPU pays scalar-core loop issue);
-  * an UNROLLED loop removes the per-iteration control overhead and
-    (for VECTOR/UNROLLED compute) replicates datapath lanes spatially, so
-    resources grow with the unroll factor while cycles shrink.
+The model reproduces the paper's *mechanism*:
+
+  * an ``@fsm`` loop is time-division multiplexing — one datapath copy,
+    an FSM state transition paid every iteration (Calyx emits exactly
+    such an FSM per control transition);
+  * an ``@unroll`` loop replicates datapath copies spatially and drops
+    the per-iteration FSM transition, but stays memory-port-limited, so
+    resources grow with the unroll factor while cycles shrink only by
+    the removed control — the paper's TABLE I / Fig. 3 trade.
 
 Hardware constants follow the assignment: TPU v5e — 197 TFLOP/s bf16,
 819 GB/s HBM, ~50 GB/s/link ICI, clocked at ~940 MHz.
+
+FLOP / HBM-byte accounting for roofline math (``flops``, ``hbm_bytes``)
+stays at the LoopIR level: it characterises the *workload*, not the
+generated hardware.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+import math
+from typing import Dict, List, Tuple, Union
 
-from .loop_ir import (EwiseTile, Kernel, Loop, LoopKind, MatmulTile, MemSpace,
-                      Stmt, TileRef, ZeroTile)
+from . import hw_ir
+from .hw_ir import HwCtrl, HwLoop, HwModule, HwStep
+from .loop_ir import Kernel, Loop, MatmulTile, MemSpace, TileRef
 from .tensor_ir import dtype_bytes
 
 
@@ -45,21 +61,21 @@ class MachineModel:
     mxu_dim: int = 128
     # VPU: 8 sublanes x 128 lanes = 1024 f32 ALUs.
     vpu_lanes: int = 1024
-    # Per-iteration control overhead of a sequential (time-multiplexed) loop:
-    # scalar-core bookkeeping (compare/branch/index update). Calyx pays an
-    # FSM state transition; we pay this. Calibrated (with the scalar-MAC
-    # costs below) so the nested/flattened cycle ratio of the scalar GEMM
-    # schedules reproduces the paper's TABLE I (1.34x @4x4 .. 1.43x @128).
+    # Cost of one FSM state-transition chain per loop iteration (compare /
+    # counter-increment / state register update).  Calibrated (with the
+    # scalar-MAC costs below) so the nested/flattened cycle ratio of the
+    # scalar GEMM schedules reproduces the paper's TABLE I
+    # (1.34x @4x4 .. 1.43x @128).
     seq_loop_overhead_cycles: float = 5.46
-    # One-off loop setup cost.
+    # One-off sequencer setup cost per loop.
     loop_setup_cycles: float = 1.0
-    # scalar-datapath MAC: compute (multiply+add+acc-writeback) and per-
+    # scalar MAC unit: compute (multiply+add+acc-writeback) and per-
     # operand-element load cost; the datapath is memory-PORT-limited, so
     # spatial unrolling does not speed these up (it removes only the
     # per-iteration control) — exactly the paper's observed mechanism.
     scalar_mac_compute_cycles: float = 9.1
     scalar_load_cycles_per_elem: float = 1.82
-    # tiles with every dim >= this use the systolic-MXU cost model
+    # matmuls with every dim >= this lower onto the systolic MXU unit
     mxu_min_dim: int = 8
     # HBM <-> VMEM bandwidth in bytes/cycle (819 GB/s / 0.94 GHz).
     hbm_bytes_per_cycle: float = 871.0
@@ -73,6 +89,15 @@ class MachineModel:
 
 
 TPU_V5E = MachineModel()
+
+#: what the models accept: hardware, or a scheduled kernel to be lowered
+HwLike = Union[HwModule, Kernel]
+
+
+def _as_hw(x: HwLike, m: MachineModel) -> HwModule:
+    if isinstance(x, HwModule):
+        return x
+    return hw_ir.lower_to_hw(x, mxu_min_dim=m.mxu_min_dim)
 
 
 @dataclasses.dataclass
@@ -91,123 +116,136 @@ class CycleReport:
 class ResourceReport:
     """Spatial consumption — the Fig. 3 analogue."""
 
-    compute_lanes: int       # concurrently-live MAC lanes (DSP analogue)
-    vmem_bytes: int          # on-chip scratch (BRAM analogue)
+    compute_lanes: int       # peak datapath lanes x copies (DSP analogue)
+    vmem_bytes: int          # on-chip RAM bytes (BRAM analogue)
     vreg_tiles: int          # live register tiles (FF/LUT analogue)
+    fsm_states: int = 0      # flattened control-FSM states
+    reg_bits: int = 0        # architectural + counter + state register bits
 
     def __str__(self):
         return (f"resources(lanes={self.compute_lanes:,}, "
-                f"vmem={self.vmem_bytes:,}B, vregs={self.vreg_tiles})")
+                f"vmem={self.vmem_bytes:,}B, vregs={self.vreg_tiles}, "
+                f"fsm_states={self.fsm_states}, reg_bits={self.reg_bits})")
 
 
 # --------------------------------------------------------------------------
-# Cycle model
+# Cycle model — walks the HwModule control tree
 # --------------------------------------------------------------------------
 
 
-def _tile_io_bytes(ref: TileRef) -> int:
-    return ref.tile_bytes
+def _operand_bytes(mod: HwModule, opnd: hw_ir.HwOperand) -> int:
+    return opnd.elems * dtype_bytes(mod.storage(opnd.target).dtype)
 
 
-def _stmt_cycles(s: Stmt, m: MachineModel, vector_lanes: int) -> Dict[str, float]:
-    """Cycles for one execution of a leaf statement.
+def _port_cycles(mod: HwModule, opnd: hw_ir.HwOperand, m: MachineModel,
+                 vreg_free: bool) -> float:
+    """Memory-port cost of moving one operand tile."""
+    space = mod.space_of(opnd.target)
+    if space == MemSpace.HBM:
+        return _operand_bytes(mod, opnd) / m.hbm_bytes_per_cycle
+    if space == MemSpace.VMEM or not vreg_free:
+        return _operand_bytes(mod, opnd) / m.vmem_bytes_per_cycle
+    return 0.0      # register-file operands ride dedicated bypass paths
 
-    ``vector_lanes`` > 1 when the statement sits under VECTOR loops (true
-    SIMD with widened ports).  Plain UNROLLED replication does NOT speed a
-    statement up: the scalar datapath is memory-port-limited, so spatial
-    flattening removes only loop-control overhead — this is the paper's
-    measured behaviour (TABLE I gains of 1.34-1.43x for proportional
-    hardware growth in Fig. 3).
+
+def _step_cycles(step: HwStep, mod: HwModule, m: MachineModel,
+                 simd_lanes: int) -> Dict[str, float]:
+    """Cycles for one invocation of a datapath unit.
+
+    ``simd_lanes`` > 1 when the step sits under ``@simd`` loops (true
+    SIMD with widened ports).  Plain ``@unroll`` replication does NOT
+    speed an invocation up: the unit stays memory-port-limited, so
+    spatial flattening removes only control — the paper's measured
+    behaviour (TABLE I gains of 1.34-1.43x for proportional hardware
+    growth in Fig. 3).
     """
-    import math
-
-    if isinstance(s, ZeroTile):
-        compute = max(1.0, s.dst.tile_elems / min(m.vpu_lanes, vector_lanes *
-                                                  max(1, s.dst.tile_elems)))
+    unit = mod.unit(step.unit)
+    if step.op == "zero":
+        elems = step.operands[0].elems
+        compute = max(1.0, elems / min(m.vpu_lanes,
+                                       simd_lanes * max(1, elems)))
         return {"compute": compute, "memory": 0.0}
-    if isinstance(s, MatmulTile):
-        mt, kt = s.lhs.tile[-2:]
-        nt = s.rhs.tile[-1]
-        if min(mt, nt, kt) >= m.mxu_min_dim:
-            # systolic regime: ceil-div each output dim to the 128 grid; a
-            # pass costs k-depth cycles (pipelined) per 128x128 tile.
-            tiles = math.ceil(mt / m.mxu_dim) * math.ceil(nt / m.mxu_dim)
+    if step.op == "matmul":
+        dst, lhs, rhs = step.operands
+        mt, kt = lhs.tile[-2], lhs.tile[-1]
+        nt = rhs.tile[-1]
+        if unit.kind == "mxu":
+            # systolic regime: ceil-div each output dim to the array grid;
+            # a pass costs k-depth cycles (pipelined) per array tile.
+            tiles = (math.ceil(mt / m.mxu_dim) * math.ceil(nt / m.mxu_dim))
             compute = tiles * max(kt, m.mxu_dim)
-            mem = 0.0
-            for ref in (s.lhs, s.rhs, s.dst):
-                bw = (m.vmem_bytes_per_cycle if ref.buffer.space != MemSpace.HBM
-                      else m.hbm_bytes_per_cycle)
-                mem += _tile_io_bytes(ref) / bw
+            mem = sum(_port_cycles(mod, o, m, vreg_free=False)
+                      for o in (lhs, rhs, dst))
             return {"compute": compute, "memory": mem}
-        # scalar-datapath regime (the paper's Calyx-generated GEMM)
+        # scalar MAC unit (the paper's Calyx-generated GEMM datapath)
         macs = mt * nt * kt
-        compute = m.scalar_mac_compute_cycles * macs / vector_lanes
+        compute = m.scalar_mac_compute_cycles * macs / simd_lanes
         loads = (mt * kt + kt * nt) * m.scalar_load_cycles_per_elem
         return {"compute": compute, "memory": loads}
-    if isinstance(s, EwiseTile):
-        compute = max(1.0, s.dst.tile_elems / min(m.vpu_lanes, vector_lanes))
-        mem = 0.0
-        for ref in [s.dst, *s.srcs]:
-            if ref.buffer.space == MemSpace.HBM:
-                mem += _tile_io_bytes(ref) / m.hbm_bytes_per_cycle
-            elif ref.buffer.space == MemSpace.VMEM:
-                mem += _tile_io_bytes(ref) / m.vmem_bytes_per_cycle
-        return {"compute": compute, "memory": mem}
-    raise TypeError(f"unknown stmt {type(s)}")
+    # vpu elementwise
+    elems = step.operands[0].elems
+    compute = max(1.0, elems / min(m.vpu_lanes, simd_lanes))
+    mem = sum(_port_cycles(mod, o, m, vreg_free=True)
+              for o in step.operands)
+    return {"compute": compute, "memory": mem}
 
 
-def cycles(kernel: Kernel, m: MachineModel = TPU_V5E) -> CycleReport:
-    """Walk the schedule and accumulate cycles.
+def cycles(x: HwLike, m: MachineModel = TPU_V5E) -> CycleReport:
+    """Walk the hardware module's control tree and accumulate cycles.
 
-    SEQUENTIAL loops multiply body cost by the extent and add per-iteration
-    control overhead (time-division multiplexing of one datapath).
-    UNROLLED loops multiply work by the extent but pay control only ONCE:
-    spatial flattening removes FSM/loop overhead yet stays port-limited —
-    the paper's TABLE I mechanism (1.34-1.43x, not extent-x, speedups).
-    VECTOR loops are true SIMD: compute is divided across VPU lanes.
-    GRID loops are the pallas grid: sequential on one core, but with
-    double-buffered DMA (memory overlapped with compute across steps).
+    ``@fsm`` loops multiply body cost by the trip count and add an FSM
+    state transition per trip (time-division multiplexing of one
+    datapath copy).  ``@unroll`` loops multiply work by the trip count
+    but pay control only ONCE: spatial flattening removes the FSM
+    transitions yet stays port-limited — the paper's TABLE I mechanism
+    (1.34-1.43x, not trips-x, speedups).  ``@simd`` loops are true SIMD:
+    compute divides across VPU lanes.  ``@stream`` loops are the pallas
+    grid: sequential on one core with double-buffered DMA (memory
+    overlapped with compute across steps).
     """
+    mod = _as_hw(x, m)
 
-    def go(stmts: List[Stmt], vlanes: int) -> Dict[str, float]:
+    def go(nodes: List[HwCtrl], lanes: int) -> Dict[str, float]:
         acc = {"compute": 0.0, "memory": 0.0, "control": 0.0}
-        for s in stmts:
-            if isinstance(s, Loop):
-                if s.kind == LoopKind.SEQUENTIAL:
-                    body = go(s.body, vlanes)
-                    acc["compute"] += body["compute"] * s.var.extent
-                    acc["memory"] += body["memory"] * s.var.extent
+        for n in nodes:
+            if isinstance(n, HwLoop):
+                if n.kind == "fsm":
+                    body = go(n.body, lanes)
+                    acc["compute"] += body["compute"] * n.trips
+                    acc["memory"] += body["memory"] * n.trips
                     acc["control"] += (m.loop_setup_cycles +
-                                       body["control"] * s.var.extent +
-                                       m.seq_loop_overhead_cycles * s.var.extent)
-                elif s.kind == LoopKind.UNROLLED:
-                    body = go(s.body, vlanes)
-                    acc["compute"] += body["compute"] * s.var.extent
-                    acc["memory"] += body["memory"] * s.var.extent
-                    acc["control"] += m.loop_setup_cycles + body["control"] * s.var.extent
-                elif s.kind == LoopKind.VECTOR:
-                    body = go(s.body, vlanes * s.var.extent)
-                    acc["compute"] += body["compute"] * s.var.extent
-                    acc["memory"] += body["memory"] * s.var.extent
-                    acc["control"] += m.loop_setup_cycles + body["control"] * s.var.extent
-                elif s.kind == LoopKind.GRID:
-                    body = go(s.body, vlanes)
-                    # double-buffered: memory overlaps compute across grid steps
-                    comp = body["compute"] * s.var.extent
-                    mem = body["memory"] * s.var.extent
-                    acc["compute"] += max(comp, mem)  # overlap: pay the max
+                                       body["control"] * n.trips +
+                                       m.seq_loop_overhead_cycles * n.trips)
+                elif n.kind == "unroll":
+                    body = go(n.body, lanes)
+                    acc["compute"] += body["compute"] * n.trips
+                    acc["memory"] += body["memory"] * n.trips
                     acc["control"] += (m.loop_setup_cycles +
-                                       body["control"] * s.var.extent +
-                                       m.seq_loop_overhead_cycles * s.var.extent)
+                                       body["control"] * n.trips)
+                elif n.kind == "simd":
+                    body = go(n.body, lanes * n.trips)
+                    acc["compute"] += body["compute"] * n.trips
+                    acc["memory"] += body["memory"] * n.trips
+                    acc["control"] += (m.loop_setup_cycles +
+                                       body["control"] * n.trips)
+                elif n.kind == "stream":
+                    body = go(n.body, lanes)
+                    # double-buffered: memory overlaps compute across steps
+                    comp = body["compute"] * n.trips
+                    mem = body["memory"] * n.trips
+                    acc["compute"] += max(comp, mem)    # overlap: pay the max
+                    acc["control"] += (m.loop_setup_cycles +
+                                       body["control"] * n.trips +
+                                       m.seq_loop_overhead_cycles * n.trips)
                 else:
-                    raise ValueError(s.kind)
+                    raise ValueError(n.kind)
             else:
-                c = _stmt_cycles(s, m, vlanes)
+                c = _step_cycles(n, mod, m, lanes)
                 acc["compute"] += c["compute"]
                 acc["memory"] += c["memory"]
         return acc
 
-    a = go(kernel.body, 1)
+    a = go(mod.ctrl, 1)
     total = int(round(a["compute"] + a["memory"] + a["control"]))
     return CycleReport(total=total, compute=int(round(a["compute"])),
                        memory=int(round(a["memory"])),
@@ -215,81 +253,54 @@ def cycles(kernel: Kernel, m: MachineModel = TPU_V5E) -> CycleReport:
 
 
 # --------------------------------------------------------------------------
-# Resource model (Fig. 3 analogue)
+# Resource model (Fig. 3 analogue) — reads the module structure
 # --------------------------------------------------------------------------
 
 
-def resources(kernel: Kernel, m: MachineModel = TPU_V5E) -> ResourceReport:
-    """Spatial resources of the schedule.
+def resources(x: HwLike, m: MachineModel = TPU_V5E) -> ResourceReport:
+    """Spatial resources of the hardware module.
 
-    The datapath under a SEQUENTIAL/GRID loop is instantiated *once* and
-    reused each iteration (paper: "time division multiplexing, allowing
-    the reuse of data paths and DSPs").  Under UNROLLED/VECTOR loops it is
-    replicated ``extent`` times (paper: "hardware consumption is directly
-    proportional to the size of matrix").
+    The datapath under an ``@fsm``/``@stream`` loop is instantiated
+    *once* and reused each trip (paper: "time division multiplexing,
+    allowing the reuse of data paths and DSPs"); under ``@unroll`` /
+    ``@simd`` its units carry ``copies`` = the replication product
+    (paper: "hardware consumption is directly proportional to the size
+    of matrix").  Lane and RAM totals are read straight off the
+    declarations; live register tiles walk the control tree because a
+    register bank replicated with its datapath counts once per copy.
     """
+    mod = _as_hw(x, m)
+    reg_names = {r.name for r in mod.regs}
 
-    max_lanes = 0
     max_vregs = 0
+    for step, _, trail in mod.walk():
+        if not isinstance(step, HwStep):
+            continue
+        rep = 1
+        for loop in trail:
+            if loop.kind in ("unroll", "simd"):
+                rep *= loop.trips
+        live = sum(1 for o in step.operands if o.target in reg_names)
+        max_vregs = max(max_vregs, live * rep)
 
-    def go(stmts: List[Stmt], replication: int):
-        nonlocal max_lanes, max_vregs
-        live_vregs = 0
-        for s in stmts:
-            if isinstance(s, Loop):
-                rep = replication
-                if s.kind in (LoopKind.UNROLLED, LoopKind.VECTOR):
-                    rep *= s.var.extent
-                go(s.body, rep)
-            else:
-                lanes = 0
-                if isinstance(s, MatmulTile):
-                    lanes = min(s.lhs.tile[-2], m.mxu_dim) * min(s.rhs.tile[-1], m.mxu_dim)
-                elif isinstance(s, (EwiseTile, ZeroTile)):
-                    lanes = min(s.dst.tile_elems, m.vpu_lanes)
-                vregs = sum(1 for ref in _refs(s) if ref.buffer.space == MemSpace.VREG)
-                max_lanes = max(max_lanes, lanes * replication)
-                live_vregs = max(live_vregs, vregs * replication)
-        max_vregs = max(max_vregs, live_vregs)
-
-    go(kernel.body, 1)
-    vmem = kernel.vmem_bytes()
+    vmem = mod.mem_bytes()
     if vmem > m.vmem_capacity_bytes:
         raise ResourceWarning(
-            f"kernel {kernel.name} VMEM footprint {vmem} exceeds "
+            f"module {mod.name} RAM footprint {vmem} exceeds "
             f"capacity {m.vmem_capacity_bytes}")
-    return ResourceReport(compute_lanes=max_lanes, vmem_bytes=vmem,
-                          vreg_tiles=max_vregs)
-
-
-def _refs(s: Stmt):
-    from .loop_ir import _stmt_refs
-    return _stmt_refs(s)
+    return ResourceReport(compute_lanes=mod.lane_count(), vmem_bytes=vmem,
+                          vreg_tiles=max_vregs,
+                          fsm_states=mod.fsm_state_count(),
+                          reg_bits=mod.register_bits())
 
 
 # --------------------------------------------------------------------------
-# FLOP / byte accounting used by roofline math elsewhere
+# FLOP / byte accounting used by roofline math elsewhere (workload-side,
+# so it stays on LoopIR)
 # --------------------------------------------------------------------------
 
 
 def flops(kernel: Kernel) -> int:
-    total = 0
-    for s, _, trail in kernel.walk():
-        if isinstance(s, (MatmulTile, EwiseTile, ZeroTile)):
-            trip = 1
-            for loop in trail:
-                trip *= loop.var.extent
-            if isinstance(s, MatmulTile):
-                total += 2 * s.macs * trip
-            elif isinstance(s, EwiseTile):
-                total += s.dst.tile_elems * trip
-            else:
-                total += s.dst.tile_elems * trip
-    return total
-
-
-def hbm_bytes(kernel: Kernel) -> int:
-    """Bytes moved between HBM and on-chip storage (once per touch)."""
     total = 0
     for s, _, trail in kernel.walk():
         if isinstance(s, Loop):
@@ -297,7 +308,25 @@ def hbm_bytes(kernel: Kernel) -> int:
         trip = 1
         for loop in trail:
             trip *= loop.var.extent
-        for ref in _refs(s):
+        if isinstance(s, MatmulTile):
+            total += 2 * s.macs * trip
+        else:
+            total += s.dst.tile_elems * trip
+    return total
+
+
+def hbm_bytes(kernel: Kernel) -> int:
+    """Bytes moved between HBM and on-chip storage (once per touch)."""
+    from .loop_ir import _stmt_refs
+
+    total = 0
+    for s, _, trail in kernel.walk():
+        if isinstance(s, Loop):
+            continue
+        trip = 1
+        for loop in trail:
+            trip *= loop.var.extent
+        for ref in _stmt_refs(s):
             if ref.buffer.space == MemSpace.HBM:
                 total += ref.tile_bytes * trip
     return total

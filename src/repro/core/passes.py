@@ -13,9 +13,10 @@ or a programmatically-built :class:`PassManager`::
 mirroring MLIR's ``PassManager`` / ``mlir-opt`` split.  The manager owns
 an ordered list of registered passes with declared IR levels, checks that
 each pass receives an artifact of its level (a ``tensor`` pass gets a
-``Graph``, a ``loop`` or ``backend`` pass gets a ``Kernel``), re-runs the
-IR verifier between passes, and records per-pass instrumentation (wall
-time, IR-size delta, optional before/after textual dumps).
+``Graph``, a ``loop`` or ``backend`` pass gets a ``Kernel``, an ``hw``
+pass gets an ``HwModule``), re-runs the IR verifier between passes, and
+records per-pass instrumentation (wall time, IR-size delta, optional
+before/after textual dumps).
 
 New passes register with ``@register_pass`` exactly like new ops register
 with ``register_op`` — third parties extend the pipeline without touching
@@ -29,13 +30,17 @@ import re
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
-from . import backend_jax, backend_pallas, backend_ref, lowering, schedule
+from . import backend_jax, backend_pallas, backend_ref, hw_ir, lowering, schedule
+from .hw_ir import HwModule
 from .loop_ir import Kernel, LoopKind, MemSpace
 from .tensor_ir import Graph
 
-Artifact = Union[Graph, Kernel, Callable]
+Artifact = Union[Graph, Kernel, HwModule, Callable, str]
 
-LEVELS = ("tensor", "loop", "backend")
+#: IR levels in lowering order; a pass's level names the IR it *consumes*
+#: (``lower`` is a tensor pass producing LoopIR, ``lower-to-hw`` a loop
+#: pass producing HwIR, ``emit-verilog`` an hw pass producing text).
+LEVELS = ("tensor", "loop", "hw", "backend")
 
 
 class PassError(ValueError):
@@ -45,7 +50,7 @@ class PassError(ValueError):
 @dataclasses.dataclass(frozen=True)
 class PassDef:
     name: str
-    level: str                       # "tensor" | "loop" | "backend"
+    level: str                       # "tensor" | "loop" | "hw" | "backend"
     fn: Callable[..., Artifact]
     doc: str = ""
 
@@ -147,6 +152,17 @@ def _grid(k: Kernel, vars: int = 2) -> Kernel:
     return k
 
 
+@register_pass("lower-to-hw", "loop",
+               "scheduled LoopIR -> HwIR (FSM + datapath module)")
+def _lower_to_hw(k: Kernel, mxu_min_dim: int = 8) -> HwModule:
+    return hw_ir.lower_to_hw(k, mxu_min_dim=mxu_min_dim)
+
+
+@register_pass("emit-verilog", "hw", "emit Verilog-style RTL text")
+def _emit_verilog(mod: HwModule) -> str:
+    return hw_ir.emit_verilog(mod)
+
+
 @register_pass("emit-ref", "backend", "emit numpy interpreter callable")
 def _emit_ref(k: Kernel):
     return lambda *xs: backend_ref.run(k, xs)
@@ -215,8 +231,10 @@ def _artifact_size(art: Artifact) -> Optional[int]:
 
 def _artifact_text(art: Artifact) -> str:
     from . import ir_text
-    if isinstance(art, (Graph, Kernel)):
+    if isinstance(art, (Graph, Kernel, HwModule)):
         return ir_text.print_ir(art)
+    if isinstance(art, str):                    # emitted RTL text
+        return art
     return f"<backend artifact {art!r}>"
 
 
@@ -307,6 +325,8 @@ class PassManager:
     def _check_level(self, pd: PassDef, art: Artifact) -> None:
         if pd.level == "tensor":
             want: type = Graph
+        elif pd.level == "hw":
+            want = HwModule
         else:                       # "loop" and "backend" consume LoopIR
             want = Kernel
         if not isinstance(art, want):
@@ -317,7 +337,7 @@ class PassManager:
                 f"check pass ordering (backend passes are terminal)")
 
     def _verify(self, pd: PassDef, art: Artifact, when: str) -> None:
-        if self.verify and isinstance(art, (Graph, Kernel)):
+        if self.verify and isinstance(art, (Graph, Kernel, HwModule)):
             try:
                 art.verify()
             except ValueError as e:
@@ -332,14 +352,14 @@ class PassManager:
         # dump flag is set: printing the IR after every pass is O(IR size)
         # and run() sits on the compile hot path (autotune sweeps it).
         keep_trace = self.dump_after_each or self.dump_before_each
-        if isinstance(art, (Graph, Kernel)) and self.verify:
+        if isinstance(art, (Graph, Kernel, HwModule)) and self.verify:
             try:
                 art.verify()
             except ValueError as e:
                 raise PassError(f"input IR failed verification: {e}") from e
         if keep_trace:
             trace.append(f"== input ==\n{_artifact_text(art)}"
-                         if isinstance(art, (Graph, Kernel)) else "== input ==")
+                         if isinstance(art, (Graph, Kernel, HwModule)) else "== input ==")
         for pd, kwargs in self._stages:
             self._check_level(pd, art)
             size_before = _artifact_size(art)
@@ -362,7 +382,7 @@ class PassManager:
                 size_after=_artifact_size(art),
                 dump_before=dump_before, dump_after=dump_after))
             if self.dump_after_each:
-                if isinstance(art, (Graph, Kernel)):
+                if isinstance(art, (Graph, Kernel, HwModule)):
                     trace.append(f"== after {pd.name} ==\n{dump_after}")
                 else:
                     trace.append(f"== after {pd.name} == <{pd.level} artifact>")

@@ -4,8 +4,10 @@
 
     python fn  --frontend-->  TensorIR  --lower-->  LoopIR
         --schedule passes-->  scheduled LoopIR
+        --lower-to-hw-->      HwIR (FSM + datapath module)
         --backend-->          {numpy oracle | jitted XLA | pallas kernel}
-        --models-->           cycles (TABLE I) + resources (Fig. 3)
+        --models-->           cycles (TABLE I) + resources (Fig. 3),
+                              derived structurally from the HwIR module
 
 and return everything a caller (tests, benchmarks, the integration layer)
 needs in one artifact.
@@ -16,8 +18,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, List, Optional, Sequence
 
-from . import backend_jax, backend_pallas, backend_ref, machine_model
+from . import backend_jax, backend_pallas, backend_ref, hw_ir, machine_model
 from .frontend import spec, trace
+from .hw_ir import HwModule
 from .lowering import LoweringOptions, lower_graph
 from .machine_model import TPU_V5E, CycleReport, MachineModel, ResourceReport
 from .passes import PassManager, PassRecord
@@ -32,9 +35,10 @@ class CompiledKernel:
     name: str
     graph: Graph
     kernel: "Kernel"                  # scheduled LoopIR
+    hw_module: HwModule               # lowered FSM + datapath hardware
     schedule: str
-    cycles: CycleReport
-    resources: ResourceReport
+    cycles: CycleReport               # structural, from hw_module
+    resources: ResourceReport         # structural, from hw_module
     flops: int
     hbm_bytes: int
     run_ref: Callable                  # numpy oracle
@@ -81,8 +85,9 @@ def compile_traced(fn_or_graph, in_specs: Optional[Sequence[spec]] = None,
     pipe = _pipeline_for(schedule, tile)
     pres = PassManager.parse(pipe).run(graph)
     kernel = pres.artifact
-    cyc = machine_model.cycles(kernel, machine)
-    res = machine_model.resources(kernel, machine)
+    hw = hw_ir.lower_to_hw(kernel, mxu_min_dim=machine.mxu_min_dim)
+    cyc = machine_model.cycles(hw, machine)
+    res = machine_model.resources(hw, machine)
     run_ref = lambda *xs: backend_ref.run(kernel, xs)
     run_jax = backend_jax.emit_jit(kernel) if want_jax else None
     run_pal = None
@@ -92,7 +97,8 @@ def compile_traced(fn_or_graph, in_specs: Optional[Sequence[spec]] = None,
         except backend_pallas.EmitError:
             run_pal = None
     return CompiledKernel(
-        name=graph.name, graph=graph, kernel=kernel, schedule=schedule,
+        name=graph.name, graph=graph, kernel=kernel, hw_module=hw,
+        schedule=schedule,
         cycles=cyc, resources=res, flops=machine_model.flops(kernel),
         hbm_bytes=machine_model.hbm_bytes(kernel),
         run_ref=run_ref, run_jax=run_jax, run_pallas=run_pal,

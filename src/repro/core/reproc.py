@@ -7,11 +7,16 @@ IR after every stage::
     python -m repro.core.reproc --input kernel.ir --pipeline "grid{vars=2}"
     python -m repro.core.reproc --gemm 256x128x64 --epilogue bias_relu \
         --pipeline "lower{tile_m=32,tile_n=32,tile_k=32},fuse-epilogue" --timing
+    python -m repro.core.reproc --emit=verilog        # built-in GEMM -> RTL
+    python -m repro.core.reproc --gemm 4x4x4 --emit=hw
     python -m repro.core.reproc --list-passes --markdown
 
 Pipeline stages separate on ``;`` or ``,``; stage arguments go in braces
 (``lower{tile_m=128}``).  Without ``--input``, the driver traces the
 quickstart GEMM (``relu(a @ b + bias)``, 64x32x16) as its input module.
+``--emit=LEVEL`` lowers the final artifact to the requested level
+(``tensor`` | ``loop`` | ``hw`` | ``verilog``) with default passes
+before printing, so ``--emit=verilog`` alone walks the whole stack.
 ``--list-passes --markdown`` regenerates ``docs/PASSES.md``.
 """
 
@@ -23,8 +28,9 @@ import sys
 from typing import List, Optional
 
 from . import frontend as fe
-from . import ir_text
+from . import hw_ir, ir_text, lowering
 from .frontend import spec, trace
+from .hw_ir import HwModule
 from .loop_ir import Kernel
 from .passes import (LEVELS, PASS_ALIASES, PASS_REGISTRY, PassError,
                      PassManager)
@@ -71,7 +77,9 @@ def passes_markdown() -> str:
     ]
     level_blurb = {
         "tensor": "Consume **TensorIR** (`Graph`); `lower` produces LoopIR.",
-        "loop": "Transform **LoopIR** (`Kernel`) in place; each re-verifies.",
+        "loop": "Transform **LoopIR** (`Kernel`) in place; each re-verifies. "
+                "`lower-to-hw` produces HwIR.",
+        "hw": "Consume **HwIR** (`HwModule`); `emit-verilog` prints RTL text.",
         "backend": "Terminal: turn a scheduled `Kernel` into a callable.",
     }
     for level in LEVELS:
@@ -110,6 +118,33 @@ def _list_passes_text() -> str:
     return "\n".join(rows)
 
 
+_EMIT_LEVELS = ("tensor", "loop", "hw", "verilog")
+
+
+def coerce_to_level(art, target: str):
+    """Lower ``art`` with default passes until it reaches ``target``.
+
+    ``--emit=verilog`` is ``hw`` plus the Verilog pretty-printer, so the
+    bare driver (no ``--pipeline``) still walks the whole stack:
+    TensorIR -> LoopIR (scalar nested) -> HwIR -> RTL text.
+    """
+    if target == "verilog":
+        if isinstance(art, str):        # pipeline already ended in emit-verilog
+            return art
+        return hw_ir.emit_verilog(coerce_to_level(art, "hw"))
+    rank = {"tensor": 0, "loop": 1, "hw": 2}[target]
+    if isinstance(art, Graph) and rank >= 1:
+        art = lowering.lower_graph(art)
+    if isinstance(art, Kernel) and rank >= 2:
+        art = hw_ir.lower_to_hw(art)
+    have = {Graph: 0, Kernel: 1, HwModule: 2}.get(type(art), -1)
+    if have != rank:
+        raise ValueError(
+            f"cannot emit {target!r} from a {type(art).__name__} artifact "
+            f"(the pipeline already lowered past that level)")
+    return art
+
+
 def _load_input(args) -> "ir_text.IR":
     if args.input:
         with open(args.input) as f:
@@ -127,8 +162,8 @@ def build_parser() -> argparse.ArgumentParser:
     p = argparse.ArgumentParser(
         prog="python -m repro.core.reproc",
         description="stagecc pipeline driver (mlir-opt analogue): run a "
-                    "pass pipeline over textual TensorIR/LoopIR and dump "
-                    "the IR at any stage.")
+                    "pass pipeline over textual TensorIR/LoopIR/HwIR and "
+                    "dump the IR at any stage.")
     p.add_argument("--pipeline", metavar="SPEC", default="",
                    help="pipeline spec, e.g. 'lower{tile_m=32};flatten' "
                         "(stages separate on ';' or ',')")
@@ -141,6 +176,9 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--epilogue", choices=("none", "relu", "bias_relu"),
                    default="bias_relu",
                    help="epilogue for the built-in GEMM input")
+    p.add_argument("--emit", choices=_EMIT_LEVELS, metavar="LEVEL",
+                   help="lower the final artifact to LEVEL (tensor|loop|"
+                        "hw|verilog) with default passes before printing")
     p.add_argument("--dump-after-each", action="store_true",
                    help="print the IR (with wall time and size delta) "
                         "after every pass")
@@ -196,9 +234,23 @@ def _run(args, out) -> int:
         print(f"error: {e}", file=sys.stderr)
         return 1
 
+    def render(final) -> str:
+        if args.emit:
+            final = coerce_to_level(final, args.emit)
+        if isinstance(final, str):
+            return final
+        if isinstance(final, (Graph, Kernel, HwModule)):
+            return ir_text.print_ir(final)
+        return f"// backend artifact: {final!r}"
+
     if not args.pipeline:
-        # no pipeline: act as a round-trip printer (mlir-opt with no passes)
-        print(ir_text.print_ir(art), file=out)
+        # no pipeline: round-trip printer (mlir-opt with no passes), plus
+        # any default lowering --emit asks for
+        try:
+            print(render(art), file=out)
+        except (PassError, ValueError) as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 1
         return 0
 
     try:
@@ -220,12 +272,19 @@ def _run(args, out) -> int:
             print(f"// ===== after {r.name} ({r.level}, "
                   f"{r.wall_ms:.3f} ms{delta}) =====", file=out)
             print(r.dump_after, file=out)
+        if args.emit:
+            try:
+                print(f"// ===== emitted ({args.emit}) =====", file=out)
+                print(render(result.artifact), file=out)
+            except ValueError as e:
+                print(f"error: {e}", file=sys.stderr)
+                return 1
     else:
-        final = result.artifact
-        text = (ir_text.print_ir(final)
-                if isinstance(final, (Graph, Kernel))
-                else f"// backend artifact: {final!r}")
-        print(text, file=out)
+        try:
+            print(render(result.artifact), file=out)
+        except ValueError as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 1
 
     if args.timing:
         print("// per-pass timing", file=out)

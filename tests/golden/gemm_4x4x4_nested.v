@@ -1,0 +1,78 @@
+// stagecc HwIR — module gemm_4x4x4_none
+// fsm: 7 states, 41 register bits, 0 RAM bytes, 1 datapath lanes
+module gemm_4x4x4_none (
+  input  wire clk,
+  input  wire rst,
+  input  wire start,
+  output reg  done,
+  // arg0: float32[4x4] @hbm (in)
+  output reg  [3:0] arg0_raddr,
+  input  wire [31:0] arg0_rdata,
+  // arg1: float32[4x4] @hbm (in)
+  output reg  [3:0] arg1_raddr,
+  input  wire [31:0] arg1_rdata,
+  // matmul1: float32[4x4] @hbm (out)
+  output reg  [3:0] matmul1_waddr,
+  output reg  [31:0] matmul1_wdata,
+  output reg  matmul1_wen
+);
+
+  // ---- control FSM: 7 states ----
+  localparam S_IDLE = 3'd0;
+  localparam S_0_I1 = 3'd1;
+  localparam S_0_0_J2 = 3'd2;
+  localparam S_0_0_0_ZERO = 3'd3;
+  localparam S_0_0_1_K3 = 3'd4;
+  localparam S_0_0_1_0_MATMUL = 3'd5;
+  localparam S_0_0_2_COPY = 3'd6;
+  reg [2:0] state;
+
+  // ---- loop counters ----
+  reg [1:0] i1;  // fsm loop, 4 trips
+  reg [1:0] j2;  // fsm loop, 4 trips
+  reg [1:0] k3;  // fsm loop, 4 trips
+
+  // ---- register banks (VREG tiles) ----
+  reg [31:0] acc4 [0:0];  // float32[1x1]
+
+  // ---- datapath units ----
+  stagecc_vpu #(.GEOMETRY("1")) vpu1 ();
+  stagecc_mac #(.GEOMETRY("1x1")) mac2 ();
+  stagecc_vpu #(.GEOMETRY("1")) vpu3 ();
+
+  // ---- schedule ----
+  always @(posedge clk) begin
+    if (rst) begin
+      state <= S_IDLE;
+      done  <= 1'b0;
+    end else begin
+      case (state)
+        S_IDLE: begin  // wait for start
+          if (start) state <= S_0_I1;
+          done <= 1'b0;
+        end
+        S_0_I1: begin  // fsm loop %i1: test/increment (4 trips)
+          state <= S_0_0_J2;
+        end
+        S_0_0_J2: begin  // fsm loop %j2: test/increment (4 trips)
+          state <= S_0_0_0_ZERO;
+        end
+        S_0_0_0_ZERO: begin  // invoke vpu1.zero(acc4)
+          state <= S_0_0_1_K3;
+        end
+        S_0_0_1_K3: begin  // fsm loop %k3: test/increment (4 trips)
+          state <= S_0_0_1_0_MATMUL;
+        end
+        S_0_0_1_0_MATMUL: begin  // invoke mac2.matmul(acc4, arg0, arg1)
+          state <= S_0_0_2_COPY;
+        end
+        S_0_0_2_COPY: begin  // invoke vpu3.copy(matmul1, acc4)
+          state <= S_IDLE;
+          done  <= 1'b1;
+        end
+        default: state <= S_IDLE;
+      endcase
+    end
+  end
+
+endmodule
