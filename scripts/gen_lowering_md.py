@@ -49,6 +49,9 @@ def main() -> int:
     verilog = block(g + ["--pipeline", "lower,flatten-inner", "--emit",
                          "verilog"], lang="verilog")
 
+    cosim = block(g + ["--pipeline", "lower", "--emit", "hw",
+                       "--simulate", "host"])
+
     nested = compile_gemm(4, 4, 4, schedule="nested",
                           want_jax=False, want_pallas=False)
     flat = compile_gemm(4, 4, 4, schedule="inner_flattened",
@@ -74,7 +77,9 @@ The stack (the paper's Fig. 1, see [ARCHITECTURE.md](ARCHITECTURE.md)):
 
 ```
 python (traced) → TensorIR → LoopIR → scheduled LoopIR → HwIR → Verilog-style RTL
-                                                          └→ structural cycles / resources
+                                                          ├→ structural cycles / resources
+                                                          └→ HwSim: cycle-accurate execution
+                                                              (+ host/crossbar co-simulation)
 ```
 
 ## Level 1 — TensorIR (the MLIR role)
@@ -153,6 +158,41 @@ flattening removes the k-loop's FSM transitions (control
 ({ncyc.compute} cycles in both), and the datapath grows from
 {nres.compute_lanes} to {fres.compute_lanes} MAC lanes
 (`benchmarks/table1_cycles.py`, `benchmarks/fig3_resources.py`).
+
+## Simulate it — the hardware level executes
+
+Pricing a module is one half of the Vivado role; *running* it is the
+other.  `--simulate` executes the hardware module cycle-accurately in
+`hw_sim` (operand address generators resolve to real numpy slices, each
+datapath invocation and FSM transition is charged its latency) and
+co-simulates: outputs are checked against the LoopIR numpy oracle and
+the **observed** cycle count lands next to the **modeled** one.
+`--simulate host` additionally wraps the run in the paper's crossbar
+integration — the host programs the generated CSR block, DMAs the input
+buffers in, kicks `CTRL.start`, polls `STATUS.done`, and DMAs the
+result back, with every phase priced in cycles:
+
+{cosim}
+
+The observed count matches the modeled one because both walk the same
+hardware with the same unit latencies (`machine_model.step_cycles` is
+the single source of truth) — a real divergence is a scheduling bug,
+and the `simulate` *pass* (`--pipeline "...,lower-to-hw,simulate"`)
+fails the pipeline on exactly that, or on non-finite outputs.  From
+Python the same checks are one call:
+
+```python
+ck = compile_gemm(4, 4, 4, schedule="nested")
+rep = ck.simulate(a, b)          # SimMismatch on numeric divergence
+rep.observed_cycles, rep.modeled_cycles, rep.max_abs_err
+tr = ck.simulate_host(a, b)      # full DMA/CSR/poll transaction
+tr.total_cycles - tr.device_cycles   # the crossbar's toll
+```
+
+Add `--trace` for the per-state retired-event trace and `--vcd FILE`
+for a waveform-style dump of the schedule
+(`benchmarks/table1_cycles.py` reports modeled-vs-simulated columns for
+every TABLE I size).
 
 ## Where to go next
 

@@ -14,7 +14,11 @@ and docs/PASSES.md (generated) for the pass reference.
 
 from .autotune import best_schedule, compile_gemm_autotuned
 from .frontend import spec, trace
+from .host_bridge import (AXI4, AXI4_LITE, Crossbar, TransactionReport,
+                          csr_map, run_transaction)
 from .hw_ir import HwModule, emit_verilog, lower_to_hw
+from .hw_sim import (CoSimReport, SimError, SimMismatch, SimReport, cosim,
+                     random_inputs, simulate)
 from .ir_text import (ir_size, parse_graph, parse_hw_module, parse_ir,
                       parse_kernel, print_graph, print_hw_module, print_ir,
                       print_kernel)
@@ -33,6 +37,10 @@ __all__ = [
     "PassRecord", "PipelineResult", "parse_pipeline", "register_pass",
     "run_pipeline",
     "HwModule", "emit_verilog", "lower_to_hw",
+    "AXI4", "AXI4_LITE", "Crossbar", "TransactionReport", "csr_map",
+    "run_transaction",
+    "CoSimReport", "SimError", "SimMismatch", "SimReport", "cosim",
+    "random_inputs", "simulate",
     "ir_size", "parse_graph", "parse_hw_module", "parse_ir", "parse_kernel",
     "print_graph", "print_hw_module", "print_ir", "print_kernel",
     "SCHEDULES", "CompiledKernel", "compile_gemm", "compile_traced",

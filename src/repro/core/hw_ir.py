@@ -34,6 +34,13 @@ An :class:`HwModule` is one synthesisable unit, Calyx-component-shaped:
                       traffic overlaps compute across steps (LoopIR
                       ``@grid``, the pallas-grid analogue).
 
+Every step operand carries an affine *address generator* (``index``) in
+the enclosing loop counters, so the hardware level is **executable**:
+``hw_sim.simulate`` walks the control tree cycle-by-cycle against real
+numpy buffers (the Vivado-simulation role), and ``host_bridge`` couples
+the module to a modelled host CPU over a crossbar (the paper's AXI/CSR
+integration).
+
 ``lower_to_hw`` is the only producer; ``emit_verilog`` pretty-prints a
 Verilog-style module (FSM state encoding, counters, register/memory
 declarations, generate-replicated units) and the textual round-trip form
@@ -50,8 +57,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .loop_ir import (EwiseTile, Kernel, Loop, LoopKind, MatmulTile, MemSpace,
-                      Stmt, TileRef, ZeroTile)
+from .loop_ir import (AffineExpr, EwiseTile, Kernel, Loop, LoopKind,
+                      MatmulTile, MemSpace, Stmt, TileRef, ZeroTile)
 from .tensor_ir import dtype_bytes
 
 #: LoopIR loop kinds -> HwIR sequencing disciplines
@@ -172,11 +179,19 @@ class HwOperand:
 
     ``role`` is the dataflow direction seen from the unit: ``read``,
     ``write``, or ``acc`` (read-modify-write accumulation).
+
+    ``index`` is the operand's address generator: one affine function of
+    the enclosing loop counters per storage dimension, in units of the
+    tile size for that dimension — the same block-index addressing as
+    :class:`~repro.core.loop_ir.TileRef`.  This is what makes HwIR
+    *executable* (``hw_sim`` walks these to real numpy slices) rather
+    than merely priceable.
     """
 
     role: str                       # "read" | "write" | "acc"
     target: str                     # name of a port / mem / reg
     tile: Tuple[int, ...]           # elements moved per invocation
+    index: Tuple[AffineExpr, ...] = ()  # block index per storage dim
 
     def __post_init__(self):
         if self.role not in ("read", "write", "acc"):
@@ -185,6 +200,25 @@ class HwOperand:
     @property
     def elems(self) -> int:
         return int(np.prod(self.tile)) if self.tile else 1
+
+    def slices(self, shape: Tuple[int, ...],
+               env: Dict[str, int]) -> Tuple[slice, ...]:
+        """Numpy slices of this operand's tile inside storage of ``shape``
+        under counter bindings ``env`` (mirrors ``TileRef.slices``)."""
+        if len(self.index) != len(shape):
+            raise IndexError(
+                f"operand {self.target}: index rank {len(self.index)} does "
+                f"not match storage rank {len(shape)} — module built "
+                f"without address generators?")
+        out = []
+        for e, t, d in zip(self.index, self.tile, shape):
+            start = e.evaluate(env) * t
+            if start < 0 or start + t > d:
+                raise IndexError(
+                    f"operand {self.target}: tile [{start}:{start + t}] out "
+                    f"of bounds (dim {d})")
+            out.append(slice(start, start + t))
+        return tuple(out)
 
 
 @dataclasses.dataclass
@@ -331,12 +365,20 @@ class HwModule:
     # ---- verification ------------------------------------------------------
 
     def verify(self) -> None:
-        names = [d.name for d in self.ports + self.regs + self.mems]
-        if len(set(names)) != len(names):
-            raise ValueError(f"duplicate storage names in module {self.name}")
-        unit_names = [u.name for u in self.units]
-        if len(set(unit_names)) != len(unit_names):
-            raise ValueError(f"duplicate unit names in module {self.name}")
+        # ports/regs/mems share one storage namespace; name the duplicate
+        seen: set = set()
+        for d in self.ports + self.regs + self.mems:
+            if d.name in seen:
+                raise ValueError(
+                    f"duplicate storage name {d.name!r} in module "
+                    f"{self.name} (ports, regs and mems share a namespace)")
+            seen.add(d.name)
+        unit_seen: set = set()
+        for u in self.units:
+            if u.name in unit_seen:
+                raise ValueError(f"duplicate unit name {u.name!r} in module "
+                                 f"{self.name}")
+            unit_seen.add(u.name)
         counters = set()
         for node, _, trail in self.walk():
             if isinstance(node, HwLoop):
@@ -344,6 +386,9 @@ class HwModule:
                     raise ValueError(f"loop %{node.counter} has no trips")
                 if node.counter in counters:
                     raise ValueError(f"shadowed counter %{node.counter}")
+                if node.counter in seen:
+                    raise ValueError(f"loop counter %{node.counter} shadows "
+                                     f"a storage name")
                 counters.add(node.counter)
             elif isinstance(node, HwStep):
                 u = self.unit(node.unit)
@@ -360,10 +405,38 @@ class HwModule:
                             raise ValueError(
                                 f"matmul operand {opnd.target} must be a "
                                 f"rank>=2 tile")
-                for opnd in node.operands:
-                    self.storage(opnd.target)   # raises on unknown name
                 if not node.operands:
                     raise ValueError(f"step {node.op} has no operands")
+                scope = {l.counter: l.trips for l in trail}
+                for opnd in node.operands:
+                    d = self.storage(opnd.target)   # raises on unknown name
+                    rank = len(d.shape)
+                    if len(opnd.tile) != rank or len(opnd.index) != rank:
+                        raise ValueError(
+                            f"operand {opnd.target}: index/tile rank "
+                            f"({len(opnd.index)}/{len(opnd.tile)}) does not "
+                            f"match storage rank {rank}")
+                    for e in opnd.index:
+                        for v, _ in e.coeffs:
+                            if v not in scope:
+                                raise ValueError(
+                                    f"operand {opnd.target}: index uses "
+                                    f"counter %{v} not bound by an "
+                                    f"enclosing loop")
+                    # bounds over the whole iteration box, sign-aware per
+                    # coefficient (a mixed-sign index like i1+-1*k3 takes
+                    # its extrema at different corners per term)
+                    for e, t, dim in zip(opnd.index, opnd.tile, d.shape):
+                        lo = hi = e.const
+                        for v, s in e.coeffs:
+                            ext = scope[v] - 1
+                            lo += min(0, s * ext)
+                            hi += max(0, s * ext)
+                        if lo * t < 0 or hi * t + t > dim:
+                            raise ValueError(
+                                f"operand {opnd.target}: tile range "
+                                f"[{lo * t}:{hi * t + t}] out of bounds "
+                                f"(dim {dim})")
 
     def __str__(self):
         from . import ir_text
@@ -402,7 +475,11 @@ class _HwLowerer:
     # ---- pieces ------------------------------------------------------------
 
     def _operand(self, role: str, ref: TileRef) -> HwOperand:
-        return HwOperand(role, ref.buffer.name, tuple(ref.tile))
+        # the TileRef's affine block index becomes the operand's address
+        # generator; HwLoop counters keep the LoopIR variable names, so
+        # the expressions stay valid at the hardware level.
+        return HwOperand(role, ref.buffer.name, tuple(ref.tile),
+                         tuple(ref.index))
 
     def _new_unit(self, kind: str, geometry: Tuple[int, ...],
                   copies: int) -> HwUnit:
@@ -485,7 +562,13 @@ class _HwLowerer:
 
 
 def lower_to_hw(kernel: Kernel, mxu_min_dim: int = 8) -> HwModule:
-    """Lower a scheduled LoopIR kernel to an FSM + datapath HwModule."""
+    """Lower a scheduled LoopIR kernel to an FSM + datapath HwModule.
+
+    The produced module is always verified before being returned
+    (:meth:`HwModule.verify` — storage/unit name uniqueness, counter
+    scoping, operand rank and bounds), so no caller ever holds an
+    unchecked hardware module.
+    """
     return _HwLowerer(kernel, mxu_min_dim=mxu_min_dim).run()
 
 

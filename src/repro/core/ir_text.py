@@ -37,7 +37,7 @@ Grammar (by example)::
       unit mxu1: mxu<16x16> x1
       ctrl {
         loop %i1 [4] @fsm {
-          step matmul mxu1(acc acc1[16x16], read arg0[16x16], read arg1[16x16])
+          step matmul mxu1(acc acc1[0, 0 : 16x16], read arg0[i1, k3 : 16x16], read arg1[k3, j2 : 16x16])
         }
       }
     }
@@ -155,7 +155,10 @@ def _print_shape(shape) -> str:
 
 
 def print_hw_operand(o: HwOperand) -> str:
-    return f"{o.role} {o.target}[{_print_shape(o.tile)}]"
+    # tileref-shaped: "role target[affine-index : tile]" — the index is
+    # the operand's address generator over the enclosing loop counters
+    idx = ", ".join(print_affine(e) for e in o.index)
+    return f"{o.role} {o.target}[{idx} : {_print_shape(o.tile)}]"
 
 
 def print_hw_ctrl(node: HwCtrl) -> List[str]:
@@ -485,7 +488,7 @@ _HW_MEM_RE = re.compile(r"^mem (\w+): (\w+)\[([\dx]*)\] @vmem$")
 _HW_UNIT_RE = re.compile(r"^unit (\w+): (\w+)<([\dx]*)> x(\d+)$")
 _HW_LOOP_RE = re.compile(r"^loop %(\w+) \[(\d+)\] @(\w+) \{$")
 _HW_STEP_RE = re.compile(r"^step ([\w.]+) (\w+)\((.*)\)$")
-_HW_OPERAND_RE = re.compile(r"^(read|write|acc) (\w+)\[([\dx]*)\]$")
+_HW_OPERAND_RE = re.compile(r"^(read|write|acc) (\w+)\[(.*) : ([\dx]*)\]$")
 
 
 def _parse_shape(s: str) -> Tuple[int, ...]:
@@ -544,8 +547,13 @@ def parse_hw_module(text: str) -> HwModule:
             o = _HW_OPERAND_RE.match(part)
             if not o:
                 raise IRParseError(lineno, ln, f"bad operand {part!r}")
-            role, target, tile = o.groups()
-            operands.append(HwOperand(role, target, _parse_shape(tile)))
+            role, target, idx, tile = o.groups()
+            try:
+                index = tuple(_parse_affine(e) for e in _split_top(idx))
+            except ValueError as e:
+                raise IRParseError(lineno, ln, str(e))
+            operands.append(HwOperand(role, target, _parse_shape(tile),
+                                      index))
         return HwStep(op, unit, operands)
 
     def parse_block() -> List[HwCtrl]:

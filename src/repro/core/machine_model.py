@@ -148,8 +148,8 @@ def _port_cycles(mod: HwModule, opnd: hw_ir.HwOperand, m: MachineModel,
     return 0.0      # register-file operands ride dedicated bypass paths
 
 
-def _step_cycles(step: HwStep, mod: HwModule, m: MachineModel,
-                 simd_lanes: int) -> Dict[str, float]:
+def step_cycles(step: HwStep, mod: HwModule, m: MachineModel,
+                simd_lanes: int) -> Dict[str, float]:
     """Cycles for one invocation of a datapath unit.
 
     ``simd_lanes`` > 1 when the step sits under ``@simd`` loops (true
@@ -240,7 +240,7 @@ def cycles(x: HwLike, m: MachineModel = TPU_V5E) -> CycleReport:
                 else:
                     raise ValueError(n.kind)
             else:
-                c = _step_cycles(n, mod, m, lanes)
+                c = step_cycles(n, mod, m, lanes)
                 acc["compute"] += c["compute"]
                 acc["memory"] += c["memory"]
         return acc

@@ -30,6 +30,8 @@ import re
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
+import numpy as np
+
 from . import backend_jax, backend_pallas, backend_ref, hw_ir, lowering, schedule
 from .hw_ir import HwModule
 from .loop_ir import Kernel, LoopKind, MemSpace
@@ -161,6 +163,37 @@ def _lower_to_hw(k: Kernel, mxu_min_dim: int = 8) -> HwModule:
 @register_pass("emit-verilog", "hw", "emit Verilog-style RTL text")
 def _emit_verilog(mod: HwModule) -> str:
     return hw_ir.emit_verilog(mod)
+
+
+@register_pass("simulate", "hw",
+               "verification: cycle-accurately execute the module")
+def _simulate(mod: HwModule, seed: int = 0, tol_pct: int = 10) -> HwModule:
+    """Run the module in ``hw_sim`` on seeded random inputs and fail the
+    pipeline if the hardware misbehaves: non-finite outputs, or an
+    observed cycle count more than ``tol_pct`` percent away from the
+    analytic ``machine_model.cycles`` prediction.  The artifact passes
+    through unchanged, so ``...,lower-to-hw,simulate,emit-verilog`` gates
+    emission on a clean simulation."""
+    from . import hw_sim, machine_model
+
+    try:
+        rep = hw_sim.simulate(mod, hw_sim.random_inputs(mod, seed=seed))
+    except hw_sim.SimError as e:
+        # re-raise on the ValueError channel every pass-failure handler
+        # (PassManager -> PassError, reproc diagnostics) listens on
+        raise ValueError(f"simulate: {e}") from e
+    for name in rep.out_ports:
+        if not np.all(np.isfinite(rep.storage[name])):
+            raise ValueError(f"simulate: output port {name!r} holds "
+                             f"non-finite values")
+    modeled = machine_model.cycles(mod).total
+    if modeled > 0:
+        dev = abs(rep.cycles.total - modeled) / modeled
+        if dev > tol_pct / 100.0:
+            raise ValueError(
+                f"simulate: observed {rep.cycles.total:,} cycles deviates "
+                f"{dev:.1%} from modeled {modeled:,} (> {tol_pct}%)")
+    return mod
 
 
 @register_pass("emit-ref", "backend", "emit numpy interpreter callable")

@@ -18,7 +18,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, List, Optional, Sequence
 
-from . import backend_jax, backend_pallas, backend_ref, hw_ir, machine_model
+from . import (backend_jax, backend_pallas, backend_ref, host_bridge, hw_ir,
+               hw_sim, machine_model)
 from .frontend import spec, trace
 from .hw_ir import HwModule
 from .lowering import LoweringOptions, lower_graph
@@ -44,12 +45,41 @@ class CompiledKernel:
     run_ref: Callable                  # numpy oracle
     run_jax: Optional[Callable]        # jitted XLA
     run_pallas: Optional[Callable]     # pallas_call (interpret on CPU)
+    machine: MachineModel = TPU_V5E    # the model the reports were priced on
     pass_records: List[PassRecord] = dataclasses.field(default_factory=list)
 
     def summary(self) -> str:
         return (f"{self.name}[{self.schedule}]: {self.cycles}, "
                 f"{self.resources}, flops={self.flops:,}, "
                 f"hbm={self.hbm_bytes:,}B")
+
+    # ---- co-simulation ----------------------------------------------------
+
+    def simulate(self, *inputs, trace: bool = False, check: bool = True,
+                 atol: float = 1e-5) -> hw_sim.CoSimReport:
+        """Run the lowered hardware module cycle-accurately on ``inputs``
+        (the Vivado-simulation leg of the paper's flow).
+
+        Co-simulation: outputs are checked against the numpy oracle
+        (``run_ref``) and the observed cycle count is packaged next to
+        the analytic ``machine_model.cycles`` prediction.  Raises
+        :class:`repro.core.hw_sim.SimMismatch` if any output deviates
+        beyond ``atol``.
+        """
+        return hw_sim.cosim(self.hw_module, self.kernel, list(inputs),
+                            machine=self.machine, modeled=self.cycles.total,
+                            trace=trace, check=check, atol=atol)
+
+    def simulate_host(self, *inputs,
+                      crossbar: host_bridge.Crossbar = host_bridge.AXI4,
+                      poll_interval: int = 64,
+                      trace: bool = False) -> host_bridge.TransactionReport:
+        """Simulate the full host-coupled transaction (DMA in → CSR start
+        → poll done → DMA out) over ``crossbar`` — the paper's
+        vendor-crossbar integration of the generated IP core."""
+        return host_bridge.run_transaction(
+            self.hw_module, list(inputs), machine=self.machine,
+            crossbar=crossbar, poll_interval=poll_interval, trace=trace)
 
 
 def _pipeline_for(schedule: str, tile: Dict[str, int]) -> str:
@@ -102,7 +132,7 @@ def compile_traced(fn_or_graph, in_specs: Optional[Sequence[spec]] = None,
         cycles=cyc, resources=res, flops=machine_model.flops(kernel),
         hbm_bytes=machine_model.hbm_bytes(kernel),
         run_ref=run_ref, run_jax=run_jax, run_pallas=run_pal,
-        pass_records=pres.records)
+        machine=machine, pass_records=pres.records)
 
 
 def compile_gemm(m: int, n: int, k: int, schedule: str = "tpu_mxu",

@@ -9,6 +9,9 @@ IR after every stage::
         --pipeline "lower{tile_m=32,tile_n=32,tile_k=32},fuse-epilogue" --timing
     python -m repro.core.reproc --emit=verilog        # built-in GEMM -> RTL
     python -m repro.core.reproc --gemm 4x4x4 --emit=hw
+    python -m repro.core.reproc --gemm 4x4x4 --pipeline lower --simulate
+    python -m repro.core.reproc --gemm 8x8x8 --pipeline lower \
+        --simulate host --trace --vcd /tmp/gemm.vcd   # full transaction
     python -m repro.core.reproc --list-passes --markdown
 
 Pipeline stages separate on ``;`` or ``,``; stage arguments go in braces
@@ -28,7 +31,7 @@ import sys
 from typing import List, Optional
 
 from . import frontend as fe
-from . import hw_ir, ir_text, lowering
+from . import host_bridge, hw_ir, hw_sim, ir_text, lowering, machine_model
 from .frontend import spec, trace
 from .hw_ir import HwModule
 from .loop_ir import Kernel
@@ -145,6 +148,52 @@ def coerce_to_level(art, target: str):
     return art
 
 
+def simulate_report(args, art) -> str:
+    """The ``--simulate`` section: co-simulate the artifact's hardware.
+
+    A Graph/Kernel artifact is lowered to hardware first (keeping the
+    LoopIR stage as the numeric oracle); an HwModule artifact simulates
+    directly (no oracle — the numeric check is skipped with a note).
+    """
+    if not isinstance(art, (Graph, Kernel, HwModule)):
+        raise ValueError(
+            "cannot simulate emitted text; end the pipeline at or before "
+            "lower-to-hw (or drop --emit=verilog)")
+    kernel = None
+    if isinstance(art, Graph):
+        art = lowering.lower_graph(art)
+    if isinstance(art, Kernel):
+        kernel = art
+        hw = hw_ir.lower_to_hw(kernel)
+    else:
+        hw = art
+
+    inputs = hw_sim.random_inputs(hw, seed=args.seed)
+    want_trace = args.trace or bool(args.vcd)
+    rep = hw_sim.cosim(hw, kernel, inputs, trace=want_trace)
+    lines = [f"// {rep.summary()}"]
+    lines.append(f"//   observed: {rep.sim.cycles}")
+    lines.append(f"//   modeled:  {machine_model.cycles(hw)}")
+    if kernel is None:
+        lines.append("//   (no LoopIR stage in scope: numeric check "
+                     "against the numpy oracle skipped)")
+    if args.simulate == "host":
+        xbar = host_bridge.Crossbar(
+            "axi4", data_width_bits=args.crossbar_width,
+            latency_cycles=args.crossbar_latency)
+        # reuse the co-sim's device run rather than simulating twice
+        tr = host_bridge.run_transaction(hw, inputs, crossbar=xbar,
+                                         sim=rep.sim)
+        lines.extend("// " + ln for ln in tr.summary().splitlines())
+    if args.trace:
+        lines.append(rep.sim.format_trace())
+    if args.vcd:
+        with open(args.vcd, "w") as f:
+            f.write(rep.sim.vcd())
+        lines.append(f"// vcd dump written to {args.vcd}")
+    return "\n".join(lines)
+
+
 def _load_input(args) -> "ir_text.IR":
     if args.input:
         with open(args.input) as f:
@@ -179,6 +228,28 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--emit", choices=_EMIT_LEVELS, metavar="LEVEL",
                    help="lower the final artifact to LEVEL (tensor|loop|"
                         "hw|verilog) with default passes before printing")
+    p.add_argument("--simulate", nargs="?", const="kernel",
+                   choices=("kernel", "host"), metavar="{kernel,host}",
+                   help="cycle-accurately simulate the final artifact's "
+                        "hardware module on seeded random inputs and print "
+                        "a co-sim report (observed vs modeled cycles, "
+                        "numeric check against the numpy oracle); 'host' "
+                        "additionally runs the full crossbar transaction "
+                        "(DMA in -> CSR start -> poll -> DMA out)")
+    p.add_argument("--trace", action="store_true",
+                   help="with --simulate: print the per-state retired-"
+                        "event trace")
+    p.add_argument("--vcd", metavar="FILE",
+                   help="with --simulate: write a VCD-style dump of the "
+                        "schedule to FILE")
+    p.add_argument("--seed", type=int, default=0,
+                   help="RNG seed for --simulate inputs (default 0)")
+    p.add_argument("--crossbar-latency", type=int, default=24,
+                   help="with --simulate host: DMA handshake latency in "
+                        "cycles (default 24)")
+    p.add_argument("--crossbar-width", type=int, default=128,
+                   help="with --simulate host: crossbar data width in "
+                        "bits (default 128)")
     p.add_argument("--dump-after-each", action="store_true",
                    help="print the IR (with wall time and size delta) "
                         "after every pass")
@@ -223,6 +294,10 @@ def _run(args, out) -> int:
     if args.markdown and not args.list_passes:
         print("error: --markdown requires --list-passes", file=sys.stderr)
         return 2
+    if (args.trace or args.vcd) and not args.simulate:
+        flag = "--trace" if args.trace else "--vcd"
+        print(f"error: {flag} requires --simulate", file=sys.stderr)
+        return 2
     if args.list_passes:
         print(passes_markdown() if args.markdown else _list_passes_text(),
               file=out)
@@ -248,7 +323,9 @@ def _run(args, out) -> int:
         # any default lowering --emit asks for
         try:
             print(render(art), file=out)
-        except (PassError, ValueError) as e:
+            if args.simulate:
+                print(simulate_report(args, art), file=out)
+        except (PassError, ValueError, hw_sim.SimError) as e:
             print(f"error: {e}", file=sys.stderr)
             return 1
         return 0
@@ -283,6 +360,13 @@ def _run(args, out) -> int:
         try:
             print(render(result.artifact), file=out)
         except ValueError as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 1
+
+    if args.simulate:
+        try:
+            print(simulate_report(args, result.artifact), file=out)
+        except (ValueError, hw_sim.SimError) as e:
             print(f"error: {e}", file=sys.stderr)
             return 1
 

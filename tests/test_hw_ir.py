@@ -64,6 +64,76 @@ def test_hw_parser_diagnostics():
         ir_text.parse_hw_module(text.replace("@fsm", "@warp"))
 
 
+# ---- verification -----------------------------------------------------------
+
+
+def test_verify_rejects_duplicate_storage_names():
+    """Ports, regs and mems share one namespace; a duplicate in any
+    combination must be rejected *by name*."""
+    import dataclasses
+
+    ck = _hw(4, "nested")
+    mod = ck.hw_module
+
+    dup_port = dataclasses.replace(mod.ports[1], name=mod.ports[0].name)
+    bad = HwModule(mod.name, [mod.ports[0], dup_port], mod.regs, mod.mems,
+                   mod.units, mod.ctrl)
+    with pytest.raises(ValueError, match=f"duplicate storage name "
+                                         f"'{mod.ports[0].name}'"):
+        bad.verify()
+
+    dup_reg = dataclasses.replace(mod.regs[0], name=mod.ports[0].name)
+    bad = HwModule(mod.name, mod.ports, [dup_reg], mod.mems, mod.units,
+                   mod.ctrl)
+    with pytest.raises(ValueError, match="duplicate storage name"):
+        bad.verify()
+
+
+def test_verify_rejects_duplicate_unit_names():
+    import dataclasses
+
+    mod = _hw(4, "nested").hw_module
+    bad = HwModule(mod.name, mod.ports, mod.regs, mod.mems,
+                   mod.units + [dataclasses.replace(mod.units[0])], mod.ctrl)
+    with pytest.raises(ValueError, match="duplicate unit name"):
+        bad.verify()
+
+
+def test_verify_rejects_unbound_index_counter():
+    """Operand address generators may only use enclosing loop counters."""
+    mod = _hw(4, "nested").hw_module
+    text = str(mod)
+    with pytest.raises(ValueError, match="counter %ghost"):
+        ir_text.parse_hw_module(text.replace("[i1, k3 :", "[ghost, k3 :", 1))
+
+
+def test_verify_rejects_mixed_sign_index_out_of_bounds():
+    """Bounds must hold over the whole iteration box: a mixed-sign affine
+    index (i1 + -1*k3) evaluates in range at both the all-zero and
+    all-max corners yet underruns at i1=0, k3=1 — verify has to be
+    sign-aware per coefficient, not corner-sampled."""
+    mod = _hw(4, "nested").hw_module
+    text = str(mod)
+    with pytest.raises(ValueError, match="out of bounds"):
+        ir_text.parse_hw_module(
+            text.replace("read arg0[i1, k3 :", "read arg0[i1+-1*k3, k3 :", 1))
+
+
+def test_verify_rejects_rank_mismatched_operand():
+    mod = _hw(4, "nested").hw_module
+    text = str(mod)
+    # drop one index dimension from a matmul operand
+    with pytest.raises(ValueError, match="rank"):
+        ir_text.parse_hw_module(text.replace("[i1, k3 :", "[i1 :", 1))
+
+
+def test_lower_to_hw_output_always_verifies():
+    """lower_to_hw verifies before returning — callers never hold an
+    unchecked module (re-verifying here is a no-op, not a crash)."""
+    for sched in SCHEDULES:
+        _hw(8, sched).hw_module.verify()
+
+
 # ---- structural lowering ----------------------------------------------------
 
 

@@ -155,6 +155,69 @@ def test_parse_rejects_unknown_buffer_and_unclosed_block():
         ir_text.parse_kernel(text.rstrip().rstrip("}"))
 
 
+def test_parse_rejects_malformed_headers_naming_the_line():
+    """Malformed module headers at every level: the diagnostic must carry
+    the 1-based line number and echo the offending line."""
+    cases = [
+        (ir_text.parse_graph, "\nstagecc.func gemm() {\n return\n}",
+         "stagecc.func gemm"),                      # missing @
+        (ir_text.parse_kernel,
+         "\n\nstagecc.kernel @k(a: tensor<4xfloat32> @hbm) {\n}",
+         "stagecc.kernel @k"),                      # missing -> (outs)
+        (ir_text.parse_hw_module, "stagecc.hw gemm {\n}", "stagecc.hw gemm"),
+    ]
+    for parse, text, needle in cases:
+        lineno = next(i + 1 for i, ln in enumerate(text.splitlines())
+                      if ln.strip())
+        with pytest.raises(ir_text.IRParseError) as ei:
+            parse(text)
+        assert f"line {lineno}:" in str(ei.value)
+        assert needle in str(ei.value)              # echoes the bad line
+        assert ei.value.lineno == lineno
+
+
+def test_parse_ir_rejects_unknown_level():
+    with pytest.raises(ValueError, match="unrecognised module header"):
+        ir_text.parse_ir("stagecc.netlist @gemm {\n}")
+
+
+def test_hw_parse_truncated_control_tree_names_last_line():
+    ck = compile_gemm(4, 4, 4, epilogue="none",
+                      want_jax=False, want_pallas=False)
+    text = str(ck.hw_module)
+    # drop the closing braces of the ctrl tree: the parser must point at
+    # the last line it saw, not raise a bare IndexError
+    truncated = "\n".join(ln for ln in text.splitlines()
+                          if ln.strip() != "}")
+    with pytest.raises(ir_text.IRParseError, match="unclosed") as ei:
+        ir_text.parse_hw_module(truncated)
+    assert ei.value.lineno == len(truncated.splitlines())
+
+
+def test_hw_parse_bad_operand_names_line():
+    ck = compile_gemm(4, 4, 4, epilogue="none",
+                      want_jax=False, want_pallas=False)
+    text = str(ck.hw_module)
+    bad = text.replace("read arg0[", "read arg0{", 1)
+    lineno = next(i + 1 for i, ln in enumerate(bad.splitlines())
+                  if "read arg0{" in ln)
+    with pytest.raises(ir_text.IRParseError, match="bad operand") as ei:
+        ir_text.parse_hw_module(bad)
+    assert f"line {lineno}:" in str(ei.value)
+
+
+def test_hw_parse_operand_index_roundtrips_semantics():
+    """The hw operand's affine address generator survives the text form
+    (split introduces multi-term indices even at the hardware level)."""
+    from repro.core import PassManager
+    hw = PassManager.parse(
+        "lower{tile_m=2,tile_n=2,tile_k=2},split{var=i1,factor=2},"
+        "lower-to-hw").run(_gemm_graph(epilogue=False)).artifact
+    text = ir_text.print_hw_module(hw)
+    assert "2*i1_o+i1_i" in text
+    assert ir_text.print_hw_module(ir_text.parse_hw_module(text)) == text
+
+
 def test_parse_type():
     assert ir_text.parse_type("tensor<64x32xfloat32>") == TensorType((64, 32))
     assert ir_text.parse_type("tensor<8xbfloat16>") == TensorType((8,), "bfloat16")

@@ -273,6 +273,85 @@ def test_cli_errors_are_diagnosed():
     assert rc == 1
 
 
+def test_cli_unknown_pass_exits_nonzero_with_diagnostic(capsys):
+    rc, out = _run_cli(["--pipeline", "frobnicate"])
+    assert rc == 1 and out == ""
+    err = capsys.readouterr().err
+    assert "unknown pass 'frobnicate'" in err
+    assert "registered:" in err          # the fix is listed right there
+
+
+def test_cli_unknown_emit_level_exits_nonzero(capsys):
+    # argparse rejects bad --emit choices up front (exit code 2)
+    with pytest.raises(SystemExit) as ei:
+        reproc.main(["--emit", "netlist"])
+    assert ei.value.code == 2
+    assert "invalid choice" in capsys.readouterr().err
+
+
+def test_cli_output_file_for_emit(tmp_path):
+    """-o/--output routes --emit artifacts to a file instead of stdout."""
+    dst = tmp_path / "gemm.v"
+    rc = reproc.main(["--gemm", "4x4x4", "--epilogue", "none",
+                      "--emit", "verilog", "-o", str(dst)])
+    assert rc == 0
+    assert dst.read_text().startswith("// stagecc HwIR")
+
+
+def test_cli_output_file_for_simulate_trace(tmp_path):
+    """-o also captures the --simulate co-sim report and --trace events."""
+    dst = tmp_path / "cosim.txt"
+    rc = reproc.main(["--gemm", "4x4x4", "--epilogue", "none",
+                      "--pipeline", "lower", "--simulate", "--trace",
+                      "-o", str(dst)])
+    assert rc == 0
+    text = dst.read_text()
+    assert "// cosim gemm_4x4x4_none" in text
+    assert "observed=" in text and "modeled=" in text
+    assert "// trace of gemm_4x4x4_none" in text
+
+
+def test_cli_simulate_host_and_vcd(tmp_path):
+    vcd = tmp_path / "gemm.vcd"
+    rc, out = _run_cli(["--gemm", "4x4x4", "--epilogue", "none",
+                        "--pipeline", "lower", "--simulate", "host",
+                        "--vcd", str(vcd)])
+    assert rc == 0
+    assert "// transaction gemm_4x4x4_none over axi4" in out
+    assert "dma_in" in out and "poll" in out
+    assert vcd.read_text().startswith("$date")
+
+
+def test_cli_trace_and_vcd_require_simulate(capsys):
+    rc, _ = _run_cli(["--gemm", "4x4x4", "--trace"])
+    assert rc == 2
+    assert "--trace requires --simulate" in capsys.readouterr().err
+    rc, _ = _run_cli(["--gemm", "4x4x4", "--vcd", "/tmp/x.vcd"])
+    assert rc == 2
+    assert "--vcd requires --simulate" in capsys.readouterr().err
+
+
+def test_cli_simulate_rejects_emitted_text(capsys):
+    rc, _ = _run_cli(["--gemm", "4x4x4", "--epilogue", "none",
+                      "--pipeline", "lower,lower-to-hw,emit-verilog",
+                      "--simulate"])
+    assert rc == 1
+    assert "cannot simulate emitted text" in capsys.readouterr().err
+
+
+def test_cli_simulate_hw_input_skips_oracle(tmp_path):
+    """Simulating a bare HwIR file still runs; the numeric check is
+    skipped (no LoopIR stage in scope) and says so."""
+    rc, hw_text = _run_cli(["--gemm", "4x4x4", "--epilogue", "none",
+                            "--emit", "hw"])
+    assert rc == 0
+    f = tmp_path / "m.ir"
+    f.write_text(hw_text)
+    rc2, out = _run_cli(["--input", str(f), "--simulate"])
+    assert rc2 == 0
+    assert "numeric check" in out and "skipped" in out
+
+
 def test_cli_list_passes_text():
     rc, out = _run_cli(["--list-passes"])
     assert rc == 0
