@@ -8,14 +8,17 @@ test:
 	$(PY) -m pytest -x -q
 
 # regenerate the generated docs (docs/PASSES.md from the pass registry,
-# docs/LOWERING.md from live reproc output)
+# docs/LOWERING.md and docs/DSE.md from live reproc output)
 docs:
 	$(PY) -m repro.core.reproc --list-passes --markdown > docs/PASSES.md
 	$(PY) scripts/gen_lowering_md.py > docs/LOWERING.md
+	$(PY) scripts/gen_dse_md.py > docs/DSE.md
 
-# CI gate: fail if either generated doc drifts from compiler output
+# CI gate: fail if any generated doc drifts from compiler output
 docs-check:
 	$(PY) -m repro.core.reproc --list-passes --markdown > /tmp/PASSES.md.gen
 	diff -u docs/PASSES.md /tmp/PASSES.md.gen
 	$(PY) scripts/gen_lowering_md.py > /tmp/LOWERING.md.gen
 	diff -u docs/LOWERING.md /tmp/LOWERING.md.gen
+	$(PY) scripts/gen_dse_md.py > /tmp/DSE.md.gen
+	diff -u docs/DSE.md /tmp/DSE.md.gen

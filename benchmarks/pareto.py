@@ -1,0 +1,88 @@
+"""Pareto frontier of the GEMM design space — the DSE closing the
+paper's manual "simulate in Vivado, pick a schedule" loop.
+
+For each GEMM size, ``repro.core.dse.explore`` searches schedule
+programs (the paper's two points — nested and inner-flattened — plus
+the split+unroll replication ladder, ``@stream`` double-buffering, the
+memory-placement knob and the grid-mapped MXU tilings), prices every
+candidate structurally off its lowered HwIR module, and reports the
+cycles × area frontier.  Frontier points at the smallest size are
+additionally co-simulated against the numpy oracle, mirroring the
+paper's RTL validation.
+
+Prints ``name,us_per_call,derived`` CSV rows (one ``cycles`` and one
+``area`` row per candidate; ``frontier/<n>`` rows mark the frontier
+size) followed by an ASCII frontier plot in ``#``-comment lines.
+Standalone: ``PYTHONPATH=src python -m benchmarks.pareto [--plot-only]``.
+"""
+
+from __future__ import annotations
+
+import sys
+
+from repro.core import dse
+from repro.core.reproc import quickstart_gemm
+
+SIZES = (8, 16, 32)
+#: co-simulate the whole frontier at this size (event-per-step sim)
+VALIDATE_SIZE = 8
+
+
+def explore_size(s: int) -> dse.DseResult:
+    g = quickstart_gemm(s, s, s, epilogue="none")
+    return dse.explore(g, validate_top=64 if s == VALIDATE_SIZE else 0)
+
+
+def run() -> list:
+    rows = []
+    for s in SIZES:
+        res = explore_size(s)
+        for i, c in enumerate(sorted(res.candidates, key=lambda c: c.key)):
+            tag = "frontier" if c.on_frontier else "dominated"
+            base = f"pareto/gemm{s}x{s}x{s}/{c.point.family}.{i}/{tag}"
+            rows.append((f"{base}/cycles", float("nan"), c.cycles.total))
+            rows.append((f"{base}/area", float("nan"), c.area))
+        rows.append((f"pareto/gemm{s}x{s}x{s}/frontier_points",
+                     float("nan"), len(res.frontier)))
+        rows.append((f"pareto/gemm{s}x{s}x{s}/cosim_ok", float("nan"),
+                     int(all(v.ok for v in res.validations))
+                     if res.validations else float("nan")))
+    return rows
+
+
+def ascii_plot(res: dse.DseResult, width: int = 64, height: int = 16) -> str:
+    """Log-log scatter of cycles (x) vs area (y); '*' = frontier."""
+    import math
+
+    pts = [(c.cycles.total, c.area, c.on_frontier) for c in res.candidates]
+    if not pts:
+        return "# (no candidates)"
+    lx = [math.log10(max(p[0], 1)) for p in pts]
+    ly = [math.log10(max(p[1], 1)) for p in pts]
+    x0, x1 = min(lx), max(lx) or 1.0
+    y0, y1 = min(ly), max(ly) or 1.0
+    grid = [[" "] * width for _ in range(height)]
+    for (cyc, ar, front), gx, gy in zip(pts, lx, ly):
+        col = int((gx - x0) / max(x1 - x0, 1e-9) * (width - 1))
+        row = int((gy - y0) / max(y1 - y0, 1e-9) * (height - 1))
+        grid[height - 1 - row][col] = "*" if front else "o"
+    lines = [f"# {res.graph_name}: cycles (x, log) vs area (y, log); "
+             f"'*' frontier / 'o' dominated"]
+    for r in grid:
+        lines.append("# |" + "".join(r) + "|")
+    lines.append(f"# +{'-' * width}+  x: 10^{x0:.1f}..10^{x1:.1f} cycles, "
+                 f"y: 10^{y0:.1f}..10^{y1:.1f} area")
+    return "\n".join(lines)
+
+
+def main():
+    plot_only = "--plot-only" in sys.argv
+    if not plot_only:
+        print("name,us_per_call,derived")
+        for name, us, derived in run():
+            print(f"{name},{us:.2f},{derived}")
+    print(ascii_plot(explore_size(SIZES[-1])))
+
+
+if __name__ == "__main__":
+    main()

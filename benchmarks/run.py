@@ -66,11 +66,12 @@ def _roofline_rows() -> list:
 
 
 def main() -> None:
-    from benchmarks import fig3_resources, kernel_bench, table1_cycles
+    from benchmarks import fig3_resources, kernel_bench, pareto, table1_cycles
 
     print("name,us_per_call,derived")
     sections = [("table1", table1_cycles.run),
                 ("fig3", fig3_resources.run),
+                ("pareto", pareto.run),
                 ("kernels", kernel_bench.run),
                 ("train", _train_bench)]
     for name, fn in sections:

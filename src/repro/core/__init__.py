@@ -13,6 +13,9 @@ and docs/PASSES.md (generated) for the pass reference.
 """
 
 from .autotune import best_schedule, compile_gemm_autotuned
+from .dse import (DseCandidate, DsePoint, DseResult, DseValidation,
+                  ResourceBudget, enumerate_points, explore,
+                  pareto_frontier)
 from .frontend import spec, trace
 from .host_bridge import (AXI4, AXI4_LITE, Crossbar, TransactionReport,
                           csr_map, run_transaction)
@@ -45,4 +48,6 @@ __all__ = [
     "print_graph", "print_hw_module", "print_ir", "print_kernel",
     "SCHEDULES", "CompiledKernel", "compile_gemm", "compile_traced",
     "Graph", "OP_REGISTRY", "TensorType", "register_op",
+    "DseCandidate", "DsePoint", "DseResult", "DseValidation",
+    "ResourceBudget", "enumerate_points", "explore", "pareto_frontier",
 ]

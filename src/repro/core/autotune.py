@@ -44,19 +44,45 @@ def _fits(t: int, dim: int) -> bool:
     return t <= dim and dim % t == 0
 
 
+def family_points(m: int, n: int, k: int) -> Dict[str, List[Tuple[int, int, int]]]:
+    """Unique design points per schedule family (canonical signatures).
+
+    ``tpu_mxu`` keeps the whole K reduction resident in one grid block:
+    its working set — the VMEM claim below — is ``(tm*k + k*tn)``
+    regardless of ``tk``, and its modeled cycles are monotone
+    non-increasing in ``tk`` (larger K steps mean fewer FSM trips at
+    identical port traffic).  So the per-``tk`` variants enumerated
+    before PR 4 were cost-dominated spellings of the same ``(tm, tn)``
+    working set, burning up to ``len(_TILES)``× budget per point; the
+    canonical representative is ``(tm, tn)`` with ``tk = K``.
+    ``tpu_mxu_kgrid`` time-multiplexes K over the grid, so ``tk`` is a
+    real knob there and stays in the signature.
+    """
+    pts: Dict[str, List[Tuple[int, int, int]]] = {s: [] for s in _SCHEDULES}
+    for tm, tn in itertools.product(_TILES, _TILES):
+        if not (_fits(tm, m) and _fits(tn, n)):
+            continue
+        pts["tpu_mxu"].append((tm, tn, k))
+        for tk in _TILES:
+            if _fits(tk, k):
+                pts["tpu_mxu_kgrid"].append((tm, tn, tk))
+    return pts
+
+
 def enumerate_candidates(m: int, n: int, k: int,
                          machine: MachineModel = TPU_V5E,
                          max_candidates: int = 64) -> List[Candidate]:
+    pts = family_points(m, n, k)
+    # interleave families round-robin under the budget so one family's
+    # points can never evict another's (pre-canonicalization, tpu_mxu
+    # duplicates and kgrid's cubic tile grid crowded each other out)
+    picked: List[Tuple[str, Tuple[int, int, int]]] = []
+    for row in itertools.zip_longest(*(pts[s] for s in _SCHEDULES)):
+        for sched, tile in zip(_SCHEDULES, row):
+            if tile is not None and len(picked) < max_candidates:
+                picked.append((sched, tile))
     out: List[Candidate] = []
-    seen = set()
-    for sched, tm, tn, tk in itertools.product(
-            _SCHEDULES, _TILES, _TILES, _TILES):
-        if not (_fits(tm, m) and _fits(tn, n) and _fits(tk, k)):
-            continue
-        sig = (sched, tm, tn, tk)
-        if sig in seen or len(out) >= max_candidates:
-            continue
-        seen.add(sig)
+    for sched, (tm, tn, tk) in picked:
         ck = compile_gemm(m, n, k, schedule=sched,
                           tile={"m": tm, "n": tn, "k": tk},
                           machine=machine, want_jax=False,
@@ -75,8 +101,15 @@ def enumerate_candidates(m: int, n: int, k: int,
 
 
 @functools.lru_cache(maxsize=128)
-def best_schedule(m: int, n: int, k: int) -> Tuple[str, Tuple[int, int, int]]:
-    cands = enumerate_candidates(m, n, k)
+def best_schedule(m: int, n: int, k: int,
+                  machine: MachineModel = TPU_V5E
+                  ) -> Tuple[str, Tuple[int, int, int]]:
+    """Winner of the cost-model search for one problem shape *on one
+    machine* — ``machine`` (a frozen, hashable dataclass) is part of the
+    memoization key, so machines with different VMEM capacities or unit
+    costs tune independently instead of silently reusing each other's
+    schedules."""
+    cands = enumerate_candidates(m, n, k, machine=machine)
     if not cands:
         return ("tpu_mxu_kgrid", (1, 1, 1))
     b = cands[0]
@@ -86,7 +119,7 @@ def best_schedule(m: int, n: int, k: int) -> Tuple[str, Tuple[int, int, int]]:
 def compile_gemm_autotuned(m: int, n: int, k: int, *, dtype: str = "float32",
                            interpret: bool = True,
                            machine: MachineModel = TPU_V5E) -> CompiledKernel:
-    sched, (tm, tn, tk) = best_schedule(m, n, k)
+    sched, (tm, tn, tk) = best_schedule(m, n, k, machine=machine)
     return compile_gemm(m, n, k, schedule=sched,
                         tile={"m": tm, "n": tn, "k": tk}, dtype=dtype,
                         machine=machine, interpret=interpret)

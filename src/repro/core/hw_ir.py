@@ -572,6 +572,34 @@ def lower_to_hw(kernel: Kernel, mxu_min_dim: int = 8) -> HwModule:
     return _HwLowerer(kernel, mxu_min_dim=mxu_min_dim).run()
 
 
+def set_sequencer(mod: HwModule, counter: str, kind: str) -> HwModule:
+    """Re-sequence loop ``%counter`` between ``fsm`` and ``stream``.
+
+    This is the HwIR-level scheduling knob the DSE drives: an ``fsm``
+    loop re-sequenced as ``stream`` gains the grid sequencer's
+    double-buffered DMA (memory traffic overlaps compute across steps,
+    at the price of the ping-pong buffers), and vice versa.  Only the
+    two *temporal* sequencer kinds are interconvertible — rewriting a
+    loop to/from the spatial kinds (``unroll``/``simd``) would change
+    the datapath replication the module was lowered with, so that stays
+    a LoopIR-level decision (``unroll``/``vectorize`` passes).
+    """
+    if kind not in ("fsm", "stream"):
+        raise ValueError(
+            f"set-sequencer: kind must be 'fsm' or 'stream', got {kind!r} "
+            f"(spatial sequencers are fixed at lower-to-hw time)")
+    for loop in mod.loops():
+        if loop.counter == counter:
+            if loop.kind not in ("fsm", "stream"):
+                raise ValueError(
+                    f"set-sequencer: loop %{counter} is @{loop.kind} "
+                    f"(spatial), not a temporal sequencer")
+            loop.kind = kind
+            mod.verify()
+            return mod
+    raise KeyError(f"no loop counter %{counter} in module {mod.name}")
+
+
 # --------------------------------------------------------------------------
 # Verilog-style emission (the paper's "RTL generation" stage)
 # --------------------------------------------------------------------------

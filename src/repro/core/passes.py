@@ -138,6 +138,19 @@ def _fuse(k: Kernel) -> Kernel:
     return schedule.fuse_epilogue(k)
 
 
+@register_pass("set-space", "loop",
+               "move a scratch buffer between vmem and vreg")
+def _set_space(k: Kernel, buffer: str, space: str) -> Kernel:
+    try:
+        ms = MemSpace(space)
+    except ValueError:
+        raise ValueError(f"set-space: unknown space {space!r}; choose "
+                         f"vmem or vreg")
+    if ms == MemSpace.HBM:
+        raise ValueError("set-space: scratch buffers cannot move to hbm")
+    return schedule.set_space(k, buffer, ms)
+
+
 @register_pass("grid", "loop", "map the outermost N loops to the pallas grid")
 def _grid(k: Kernel, vars: int = 2) -> Kernel:
     count = 0
@@ -163,6 +176,40 @@ def _lower_to_hw(k: Kernel, mxu_min_dim: int = 8) -> HwModule:
 @register_pass("emit-verilog", "hw", "emit Verilog-style RTL text")
 def _emit_verilog(mod: HwModule) -> str:
     return hw_ir.emit_verilog(mod)
+
+
+@register_pass("set-sequencer", "hw",
+               "re-sequence a loop between @fsm and @stream")
+def _set_sequencer(mod: HwModule, counter: str, kind: str) -> HwModule:
+    return hw_ir.set_sequencer(mod, counter, kind)
+
+
+@register_pass("dse", "tensor",
+               "design-space exploration: search schedule programs and "
+               "return the Pareto-fastest kernel")
+def _dse(g: Graph, validate: int = 0, top: int = 4) -> Kernel:
+    """Run :func:`repro.core.dse.explore` over the module and lower the
+    winning (feasible, Pareto-fastest) schedule program's loop-level
+    pipeline; with ``validate=1`` the ``top`` fastest frontier points
+    are co-simulated against the numpy oracle first and the pass FAILS
+    if any of them diverges (numerics or modeled cycles).  HwIR-level
+    knobs of the winner are dropped (the pass must yield a Kernel so
+    the rest of the pipeline can keep lowering); replay the winner's
+    full spec through ``reproc`` to keep them."""
+    from . import dse
+
+    res = dse.explore(g, validate_top=top if validate else 0)
+    bad = [v for v in res.validations if not v.ok]
+    if bad:
+        raise ValueError(
+            f"dse: {len(bad)} frontier point(s) failed co-simulation, "
+            f"first: {bad[0].point.spec}: "
+            f"{bad[0].detail or f'max|err|={bad[0].max_abs_err:.2e}'}")
+    best = res.best()
+    if best is None:
+        raise ValueError(f"dse: no feasible schedule for {g.name}")
+    art = PassManager.parse(best.point.pipeline).run(g).artifact
+    return art
 
 
 @register_pass("simulate", "hw",

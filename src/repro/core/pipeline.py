@@ -81,6 +81,20 @@ class CompiledKernel:
             self.hw_module, list(inputs), machine=self.machine,
             crossbar=crossbar, poll_interval=poll_interval, trace=trace)
 
+    # ---- design-space exploration -----------------------------------------
+
+    def explore(self, **kwargs):
+        """Design-space exploration around this kernel's source graph:
+        search schedule programs × HwIR knobs on this kernel's machine
+        and return the priced/validated Pareto frontier
+        (:class:`repro.core.dse.DseResult`).  Keyword arguments forward
+        to :func:`repro.core.dse.explore` (``validate_top``, ``budget``,
+        ``tiles``, ``workers``, ``cache_dir``, ...)."""
+        from . import dse
+
+        kwargs.setdefault("machine", self.machine)
+        return dse.explore(self.graph, **kwargs)
+
 
 def _pipeline_for(schedule: str, tile: Dict[str, int]) -> str:
     t = f"tile_m={tile['m']},tile_n={tile['n']},tile_k={tile['k']}"

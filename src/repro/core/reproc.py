@@ -12,6 +12,8 @@ IR after every stage::
     python -m repro.core.reproc --gemm 4x4x4 --pipeline lower --simulate
     python -m repro.core.reproc --gemm 8x8x8 --pipeline lower \
         --simulate host --trace --vcd /tmp/gemm.vcd   # full transaction
+    python -m repro.core.reproc --gemm 32x32x32 --epilogue none \
+        --dse --pareto-csv pareto.csv   # design-space exploration
     python -m repro.core.reproc --list-passes --markdown
 
 Pipeline stages separate on ``;`` or ``,``; stage arguments go in braces
@@ -228,6 +230,16 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--emit", choices=_EMIT_LEVELS, metavar="LEVEL",
                    help="lower the final artifact to LEVEL (tensor|loop|"
                         "hw|verilog) with default passes before printing")
+    p.add_argument("--dse", nargs="?", const=4, type=int, metavar="N",
+                   help="design-space exploration: search schedule "
+                        "programs x HwIR knobs over the input module, "
+                        "print the cycles x area Pareto frontier, and "
+                        "co-simulate the N fastest frontier points "
+                        "against the numpy oracle (default N=4; N=0 "
+                        "skips validation)")
+    p.add_argument("--pareto-csv", metavar="FILE",
+                   help="with --dse: write every priced candidate "
+                        "(plus frontier/validation flags) to FILE as CSV")
     p.add_argument("--simulate", nargs="?", const="kernel",
                    choices=("kernel", "host"), metavar="{kernel,host}",
                    help="cycle-accurately simulate the final artifact's "
@@ -243,7 +255,8 @@ def build_parser() -> argparse.ArgumentParser:
                    help="with --simulate: write a VCD-style dump of the "
                         "schedule to FILE")
     p.add_argument("--seed", type=int, default=0,
-                   help="RNG seed for --simulate inputs (default 0)")
+                   help="RNG seed for --simulate / --dse validation "
+                        "inputs (default 0)")
     p.add_argument("--crossbar-latency", type=int, default=24,
                    help="with --simulate host: DMA handshake latency in "
                         "cycles (default 24)")
@@ -298,6 +311,18 @@ def _run(args, out) -> int:
         flag = "--trace" if args.trace else "--vcd"
         print(f"error: {flag} requires --simulate", file=sys.stderr)
         return 2
+    if args.pareto_csv and args.dse is None:
+        print("error: --pareto-csv requires --dse", file=sys.stderr)
+        return 2
+    if args.dse is not None:
+        for flag, given in (("--pipeline", args.pipeline),
+                            ("--simulate", args.simulate),
+                            ("--emit", args.emit)):
+            if given:
+                print(f"error: --dse explores/validates pipelines itself "
+                      f"and cannot be combined with {flag}",
+                      file=sys.stderr)
+                return 2
     if args.list_passes:
         print(passes_markdown() if args.markdown else _list_passes_text(),
               file=out)
@@ -308,6 +333,27 @@ def _run(args, out) -> int:
     except (OSError, TypeError, ValueError) as e:
         print(f"error: {e}", file=sys.stderr)
         return 1
+
+    if args.dse is not None:
+        from . import dse
+
+        if not isinstance(art, Graph):
+            print("error: --dse needs a TensorIR module as input "
+                  f"(got {type(art).__name__}); start from --gemm or a "
+                  "stagecc.func --input", file=sys.stderr)
+            return 1
+        try:
+            res = dse.explore(art, validate_top=args.dse, seed=args.seed)
+        except (PassError, ValueError) as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 1
+        print(res.table(), file=out)
+        if args.pareto_csv:
+            with open(args.pareto_csv, "w") as f:
+                f.write(res.to_csv())
+            print(f"// pareto csv written to {args.pareto_csv}", file=out)
+        bad = [v for v in res.validations if not v.ok]
+        return 1 if bad else 0
 
     def render(final) -> str:
         if args.emit:

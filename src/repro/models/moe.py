@@ -218,11 +218,18 @@ def apply_moe(p: Params, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
     keep = rank < capacity
     slot = jnp.where(keep, e_sort * capacity + rank, E * capacity)
 
-    # scatter tokens into the expert buffer (one trash row at the end)
-    buf = jnp.zeros((E * capacity + 1, d), h.dtype)
+    # scatter tokens into the expert buffer; dropped tokens carry slot ==
+    # E*capacity, one past the end, and fall out via mode="drop".  (An
+    # earlier version kept a trash row inside the buffer and gathered
+    # back through a (E*capacity+1)-row concatenate; GSPMD mispartitions
+    # that odd-sized gather under a model-sharded mesh — the computed-
+    # index gather read wrong rows and silently zeroed routed expert
+    # contributions, the "gspmd vs shardmap divergence" tracked since
+    # PR 1.  Keeping every array exactly E*capacity rows and masking
+    # with ``keep`` is bit-exact under partitioning.)
+    buf = jnp.zeros((E * capacity, d), h.dtype)
     buf = buf.at[slot].set(h[t_sort], mode="drop")
-    xin = shard(buf[:E * capacity].reshape(E, capacity, d),
-                "experts", None, None)
+    xin = shard(buf.reshape(E, capacity, d), "experts", None, None)
 
     if gated:
         hid = act(jnp.einsum("ecd,edf->ecf", xin, p["w_gate"])) * \
@@ -231,12 +238,13 @@ def apply_moe(p: Params, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
         hid = act(jnp.einsum("ecd,edf->ecf", xin, p["w_up"]))
     hid = shard(hid, "experts", None, "ff")
     xout = jnp.einsum("ecf,efd->ecd", hid, p["w_down"])           # (E, C, d)
-    xout = jnp.concatenate([xout.reshape(E * capacity, d),
-                            jnp.zeros((1, d), xout.dtype)], axis=0)
+    flat = xout.reshape(E * capacity, d)
 
-    # gather back and combine with gates
-    contrib = xout[slot] * (g_sort * keep.astype(jnp.float32)
-                            )[:, None].astype(xout.dtype)
+    # gather back (clamped index + explicit keep mask, see above) and
+    # combine with gates
+    contrib = jnp.where(keep[:, None], flat[jnp.where(keep, slot, 0)], 0.0)
+    contrib = contrib * (g_sort * keep.astype(jnp.float32)
+                         )[:, None].astype(xout.dtype)
     y = jnp.zeros((T, d), xout.dtype).at[t_sort].add(contrib)
 
     if m.num_shared:

@@ -1,10 +1,13 @@
 """Autotuner: cost-model-driven schedule search (beyond-paper feature)."""
 
+import dataclasses
+
 import numpy as np
 import pytest
 
 from repro.core.autotune import (best_schedule, compile_gemm_autotuned,
-                                 enumerate_candidates)
+                                 enumerate_candidates, family_points)
+from repro.core.machine_model import TPU_V5E
 from repro.core.pipeline import compile_gemm
 
 
@@ -47,3 +50,59 @@ def test_mxu_aligned_tiles_preferred_on_big_gemm():
 def test_odd_shapes_get_legal_tiles():
     sched, (tm, tn, tk) = best_schedule(96, 56, 24)
     assert 96 % tm == 0 and 56 % tn == 0 and 24 % tk == 0
+
+
+def test_candidate_signatures_unique():
+    """Regression (PR 4): tpu_mxu's working set is tk-independent (full
+    K resident) and its cycles are monotone in tk, so per-tk
+    enumeration spent up to 6x budget on cost-dominated spellings of
+    each (tm, tn) point.  Canonical signatures must make every
+    enumerated candidate a distinct design point."""
+    cands = enumerate_candidates(64, 64, 64)
+    sigs = [(c.schedule, c.tile["m"], c.tile["n"], c.tile["k"])
+            for c in cands]
+    assert len(sigs) == len(set(sigs)), "duplicate candidates enumerated"
+    # tpu_mxu's canonical point pins tk to the full reduction
+    assert all(c.tile["k"] == 64 for c in cands
+               if c.schedule == "tpu_mxu")
+    # one point per (tm, tn) for tpu_mxu; (tm, tn, tk) for kgrid
+    pts = family_points(64, 64, 64)
+    assert len(pts["tpu_mxu"]) == 4 * 4
+    assert len(pts["tpu_mxu_kgrid"]) == 4 * 4 * 4
+
+
+def test_budget_cannot_evict_a_family():
+    """64^3 has 64 unique kgrid points — exactly the default budget.
+    Pre-fix, enumeration order let one family fill max_candidates and
+    evict the other entirely; the round-robin budget keeps both."""
+    cands = enumerate_candidates(64, 64, 64)
+    assert len(cands) <= 64
+    fams = {c.schedule for c in cands}
+    assert fams == {"tpu_mxu", "tpu_mxu_kgrid"}
+    # every tpu_mxu point fits under the budget next to kgrid's cube
+    assert sum(c.schedule == "tpu_mxu" for c in cands) == 16
+
+
+def test_best_schedule_is_machine_keyed():
+    """Regression (PR 4): best_schedule was lru_cached without the
+    machine, so a second machine silently reused the first's winner.
+    A VMEM-starved machine must pick a different (smaller) schedule."""
+    m = n = k = 512
+    big = dataclasses.replace(TPU_V5E, name="big_vmem")
+    # winner tile on the default machine claims (tm*k + k*tn + tm*tn)*4
+    # bytes; starve VMEM below that so the same point turns infeasible
+    sched_big, tile_big = best_schedule(m, n, k, machine=big)
+    tm, tn, tk = tile_big
+    claim = (tm * k + k * tn) * 4 + tm * tn * 4 \
+        if sched_big == "tpu_mxu" else (tm * tk + tk * tn) * 4 + tm * tn * 4
+    small = dataclasses.replace(TPU_V5E, name="small_vmem",
+                                vmem_capacity_bytes=claim // 4)
+    sched_small, tile_small = best_schedule(m, n, k, machine=small)
+    assert (sched_big, tile_big) != (sched_small, tile_small), \
+        "VMEM-starved machine reused the big machine's schedule"
+    # and the small machine's winner actually fits its budget
+    tm, tn, tk = tile_small
+    claim_small = (tm * k + k * tn) * 4 + tm * tn * 4 \
+        if sched_small == "tpu_mxu" \
+        else (tm * tk + tk * tn) * 4 + tm * tn * 4
+    assert claim_small <= small.vmem_capacity_bytes

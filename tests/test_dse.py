@@ -1,0 +1,273 @@
+"""DSE subsystem: schedule-program search, Pareto frontier, candidate
+cache, co-sim validation, and the pass/CLI wiring (PR 4 tentpole)."""
+
+import dataclasses
+import io
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import dse, hw_ir, reproc
+from repro.core.dse import (DsePoint, ResourceBudget, dominates,
+                            enumerate_points, explore, pareto_frontier,
+                            vectorize_legal)
+from repro.core.machine_model import TPU_V5E
+from repro.core.passes import PassError, PassManager
+from repro.core.pipeline import compile_gemm
+from repro.core.reproc import quickstart_gemm
+
+
+@pytest.fixture(autouse=True)
+def _isolated_cache(tmp_path, monkeypatch):
+    monkeypatch.setenv("STAGECC_DSE_CACHE", str(tmp_path / "dse-cache"))
+
+
+def _gemm(s, epilogue="none"):
+    return quickstart_gemm(s, s, s, epilogue=epilogue)
+
+
+# --------------------------------------------------------------------------
+# enumeration
+# --------------------------------------------------------------------------
+
+
+def test_space_contains_paper_points_and_knobs():
+    pts = enumerate_points(_gemm(8))
+    fams = {p.family for p in pts}
+    assert {"nested", "inner_flattened", "split_unroll", "stream_outer",
+            "tpu_mxu", "tpu_mxu_kgrid", "vmem_acc"} <= fams
+    # every point is a replayable pipeline: parse them all
+    for p in pts:
+        PassManager.parse(p.pipeline)
+        if p.hw_pipeline:
+            PassManager.parse(p.hw_pipeline)
+
+
+def test_vectorize_legality_guards_reductions():
+    """GEMM's K loop accumulates into a K-invariant tile: not SIMD-legal
+    (and neither are i/j, which share the accumulator); the epilogue's
+    elementwise loops are."""
+    pure = enumerate_points(_gemm(8))
+    assert not any(p.family == "simd" for p in pure)
+    withep = enumerate_points(_gemm(8, epilogue="bias_relu"))
+    simd = [p for p in withep if p.family == "simd"]
+    assert simd, "elementwise epilogue loops must yield simd points"
+    # and the generated vectorize pipelines actually run + verify
+    g = _gemm(8, epilogue="bias_relu")
+    for p in simd:
+        PassManager.parse(p.pipeline).run(g)
+    # direct check on the lowered kernel
+    k = dse._lower_nested(_gemm(8))
+    loops = {l.var.name: l for l in k.loops()}
+    assert not vectorize_legal(k, loops["k3"])
+    assert not vectorize_legal(k, loops["j2"])
+
+
+# --------------------------------------------------------------------------
+# frontier + validation (the acceptance contract, fast size)
+# --------------------------------------------------------------------------
+
+
+def test_frontier_8cube_contains_paper_points_plus_new():
+    res = explore(_gemm(8), validate_top=64)
+    fams = {c.point.family for c in res.frontier}
+    assert "nested" in fams and "inner_flattened" in fams
+    new = fams - {"nested", "inner_flattened"}
+    assert len(new) >= 3, f"expected >=3 new non-dominated families: {fams}"
+    # every frontier point co-simulates: exact numerics, modeled cycles
+    assert len(res.validations) == len(res.frontier)
+    for v in res.validations:
+        assert v.ok, v.detail
+        assert v.max_abs_err <= 1e-5
+        assert v.cycle_dev_pct <= 10.0
+    assert not res.errors
+
+
+@pytest.mark.slow
+def test_frontier_32cube_full_acceptance():
+    """PR-4 acceptance: the 32^3 GEMM frontier holds both paper points
+    and >=3 strictly non-dominated new schedules; every frontier point
+    co-simulates within 1e-5 of the numpy oracle and +-10% of its
+    modeled cycles."""
+    res = explore(_gemm(32), validate_top=64)
+    fams = {c.point.family for c in res.frontier}
+    assert "nested" in fams and "inner_flattened" in fams
+    assert len(fams - {"nested", "inner_flattened"}) >= 3
+    assert len(res.validations) == len(res.frontier)
+    for v in res.validations:
+        assert v.ok, v.detail
+        assert v.max_abs_err <= 1e-5
+        assert v.cycle_dev_pct <= 10.0
+
+
+def test_frontier_is_strictly_non_dominated():
+    res = explore(_gemm(8))
+    front = res.frontier
+    for a in front:
+        for b in front:
+            assert not dominates(a.key, b.key) or a.key == b.key
+    # dominated candidates really are dominated by someone on the frontier
+    for c in res.candidates:
+        if c.feasible and not c.on_frontier:
+            assert any(dominates(f.key, c.key) for f in front)
+
+
+def test_pareto_frontier_unit():
+    def cand(cycles, area, feasible=True):
+        c = dse.DseCandidate(
+            point=DsePoint("f", "lower"), cycles=None, resources=None,
+            area=area, dbuf_bytes=0, feasible=feasible)
+        c.cycles = dataclasses.make_dataclass("C", ["total"])(cycles)
+        return c
+
+    a, b, c, d = cand(10, 10), cand(10, 5), cand(5, 20), cand(3, 30, False)
+    front = pareto_frontier([a, b, c, d])
+    assert b in front and c in front
+    assert a not in front            # dominated by b
+    assert d not in front            # infeasible
+
+
+def test_budget_marks_infeasible():
+    tight = ResourceBudget(max_lanes=1, max_vmem_bytes=1 << 20,
+                           max_reg_bits=1 << 20)
+    res = explore(_gemm(8), budget=tight)
+    mxu = [c for c in res.candidates if c.point.family == "tpu_mxu"]
+    assert mxu and all(not c.feasible for c in mxu)
+    assert all(c.resources.compute_lanes <= 1 for c in res.frontier)
+
+
+# --------------------------------------------------------------------------
+# the on-disk candidate cache
+# --------------------------------------------------------------------------
+
+
+def test_cache_hits_on_second_run(tmp_path):
+    cdir = str(tmp_path / "cache")
+    r1 = explore(_gemm(8), cache_dir=cdir)
+    assert not any(c.cached for c in r1.candidates)
+    r2 = explore(_gemm(8), cache_dir=cdir)
+    assert all(c.cached for c in r2.candidates)
+    by_spec = {c.point.spec: c for c in r1.candidates}
+    for c in r2.candidates:
+        o = by_spec[c.point.spec]
+        assert (c.cycles, c.resources, c.area, c.feasible) == \
+            (o.cycles, o.resources, o.area, o.feasible)
+
+
+def test_cache_keyed_by_machine_and_graph(tmp_path):
+    cdir = str(tmp_path / "cache")
+    explore(_gemm(8), cache_dir=cdir)
+    other = dataclasses.replace(TPU_V5E, name="other",
+                                seq_loop_overhead_cycles=1.0)
+    r = explore(_gemm(8), machine=other, cache_dir=cdir)
+    assert not any(c.cached for c in r.candidates), \
+        "a different machine must not reuse cached pricings"
+    r3 = explore(_gemm(16), cache_dir=cdir)
+    assert not any(c.cached for c in r3.candidates)
+
+
+def test_cache_survives_corruption(tmp_path):
+    cdir = str(tmp_path / "cache")
+    explore(_gemm(8), cache_dir=cdir)
+    for fn in os.listdir(cdir):
+        with open(os.path.join(cdir, fn), "w") as f:
+            f.write("{not json")
+    r = explore(_gemm(8), cache_dir=cdir)
+    assert not any(c.cached for c in r.candidates)
+    assert len(r.candidates) == len(enumerate_points(_gemm(8)))
+
+
+# --------------------------------------------------------------------------
+# wiring: passes, CompiledKernel.explore, reproc CLI
+# --------------------------------------------------------------------------
+
+
+def test_dse_pass_returns_winning_kernel():
+    out = PassManager.parse("dse").run(_gemm(16))
+    kern = out.artifact
+    res = explore(_gemm(16))
+    want = PassManager.parse(res.best().point.pipeline) \
+        .run(_gemm(16)).artifact
+    from repro.core import ir_text
+    assert ir_text.print_ir(kern) == ir_text.print_ir(want)
+
+
+def test_set_sequencer_pass_round_trip_and_errors():
+    k = PassManager.parse("lower").run(_gemm(4)).artifact
+    mod = hw_ir.lower_to_hw(k)
+    outer = [l for l in mod.loops()][0]
+    assert outer.kind == "fsm"
+    hw_ir.set_sequencer(mod, outer.counter, "stream")
+    assert outer.kind == "stream"
+    hw_ir.set_sequencer(mod, outer.counter, "fsm")
+    assert outer.kind == "fsm"
+    with pytest.raises(ValueError, match="spatial"):
+        hw_ir.set_sequencer(mod, outer.counter, "unroll")
+    with pytest.raises(KeyError, match="nope"):
+        hw_ir.set_sequencer(mod, "nope", "stream")
+    # and through the pass manager, spatial loops are rejected
+    from repro.core import schedule as sched
+    k2 = PassManager.parse("lower,flatten-inner").run(_gemm(4)).artifact
+    mod2 = hw_ir.lower_to_hw(k2)
+    spatial = [l for l in mod2.loops() if l.kind == "unroll"][0]
+    with pytest.raises(PassError, match="temporal"):
+        PassManager.parse(
+            f"set-sequencer{{counter={spatial.counter},kind=stream}}"
+        ).run(mod2)
+
+
+def test_set_space_pass_errors():
+    with pytest.raises(PassError, match="unknown space"):
+        PassManager.parse("lower,set-space{buffer=acc4,space=sram}") \
+            .run(_gemm(8))
+    with pytest.raises(PassError, match="hbm"):
+        PassManager.parse("lower,set-space{buffer=acc4,space=hbm}") \
+            .run(_gemm(8))
+
+
+def test_compiled_kernel_explore():
+    ck = compile_gemm(8, 8, 8, want_jax=False, want_pallas=False)
+    res = ck.explore(validate_top=1)
+    assert res.frontier and res.validations[0].ok
+    assert res.machine is ck.machine
+
+
+def test_stream_knob_numerics_preserved():
+    """set-sequencer changes scheduling, never semantics: the re-
+    sequenced module still co-simulates exactly."""
+    res = explore(_gemm(8), validate_top=64)
+    streamed = [v for v in res.validations
+                if v.point.family in ("stream_outer", "flat_stream")]
+    assert streamed, "a stream-knob point should reach the frontier"
+    assert all(v.ok and v.max_abs_err <= 1e-5 for v in streamed)
+
+
+def test_reproc_dse_cli(tmp_path):
+    csv = tmp_path / "pareto.csv"
+    buf = io.StringIO()
+    rc = reproc.main(["--gemm", "8x8x8", "--epilogue", "none",
+                      "--dse=2", "--pareto-csv", str(csv)], out=buf)
+    assert rc == 0
+    text = buf.getvalue()
+    assert "Pareto frontier" in text and "cosim" in text
+    rows = csv.read_text().strip().splitlines()
+    assert rows[0].startswith("family,spec,cycles")
+    assert len(rows) == 1 + len(enumerate_points(_gemm(8)))
+    # flag validation
+    assert reproc.main(["--pareto-csv", "x.csv"], out=io.StringIO()) == 2
+    assert reproc.main(["--dse", "--pipeline", "lower"],
+                       out=io.StringIO()) == 2
+
+
+def test_dse_csv_roundtrips_fields():
+    res = explore(_gemm(8), validate_top=1)
+    rows = res.to_csv().strip().splitlines()
+    hdr = rows[0].split(",")
+    for row in rows[1:]:
+        # spec is quoted (it contains commas); strip it before splitting
+        assert row.count('"') == 2
+        pre, spec, post = row.split('"')
+        assert len(pre.split(",")[:-1]) + 1 + len(post.split(",")[1:]) \
+            == len(hdr)

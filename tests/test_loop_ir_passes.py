@@ -78,6 +78,123 @@ def test_fuse_epilogue_removes_extra_nests():
     np.testing.assert_allclose(out, np.maximum(a @ b + c, 0), rtol=1e-4)
 
 
+def test_fuse_epilogue_chained_ewise():
+    """relu(a@b + bias) lowers to matmul + TWO ewise nests; fuse must
+    fold the whole chain in (bias_add first, then relu consuming the
+    fused producer), leaving a single nest."""
+    g = _gemm_graph(8, 8, 8, epilogue=True)
+    kern = lower_graph(g, LoweringOptions(tile_m=4, tile_n=4, tile_k=4))
+    assert len(kern.body) == 3
+    schedule.fuse_epilogue(kern)
+    assert len(kern.body) == 1, "chained ewise nests must fuse iteratively"
+    rng = np.random.default_rng(3)
+    a = rng.standard_normal((8, 8)).astype(np.float32)
+    b = rng.standard_normal((8, 8)).astype(np.float32)
+    c = rng.standard_normal((8,)).astype(np.float32)
+    out = backend_ref.run(kern, [a, b, c])[-1]
+    np.testing.assert_allclose(out, np.maximum(a @ b + c, 0), rtol=1e-4)
+
+
+def test_fuse_epilogue_mismatched_tile_grids_refuses():
+    """A consumer walking a different tile grid (here: one loop split)
+    must NOT be fused — extents no longer line up tile-for-tile."""
+    g = _gemm_graph(8, 8, 8, epilogue=True)
+    kern = lower_graph(g, LoweringOptions(tile_m=4, tile_n=4, tile_k=4))
+    # split the bias_add nest's outer loop: its nest vars become
+    # (e_o:1, e_i:2, e:2) against the producer's (i:2, j:2, k:2)
+    ewise_outer = [s for s in kern.body][1]
+    schedule.split(kern, ewise_outer.var.name, 2)
+    n_before = len(kern.body)
+    schedule.fuse_epilogue(kern)
+    assert len(kern.body) == n_before, \
+        "mismatched tile grids must refuse to fuse"
+    rng = np.random.default_rng(4)
+    a = rng.standard_normal((8, 8)).astype(np.float32)
+    b = rng.standard_normal((8, 8)).astype(np.float32)
+    c = rng.standard_normal((8,)).astype(np.float32)
+    out = backend_ref.run(kern, [a, b, c])[-1]
+    np.testing.assert_allclose(out, np.maximum(a @ b + c, 0), rtol=1e-4)
+
+
+def test_fuse_epilogue_multi_statement_leaf_refuses():
+    """A consumer nest whose innermost body holds more than one
+    statement is not the canonical tile-for-tile ewise chain; fuse must
+    skip it and leave a verifiable kernel."""
+    g = _gemm_graph(8, 8, 8, epilogue=True)
+    kern = lower_graph(g, LoweringOptions(tile_m=4, tile_n=4, tile_k=4))
+    mm_nest, bias_nest, relu_nest = kern.body
+    # graft the relu leaf into the bias_add leaf -> two-statement leaf
+    bias_leaf_loop = bias_nest.body[0]
+    relu_leaf = relu_nest.body[0].body[0]
+    # rename the relu leaf's loop vars onto the bias nest's vars
+    mapping = {relu_nest.var.name: bias_nest.var.name,
+               relu_nest.body[0].var.name: bias_leaf_loop.var.name}
+    from repro.core.loop_ir import AffineExpr, TileRef
+
+    def rw(ref):
+        idx = tuple(AffineExpr(tuple((mapping.get(v, v), s)
+                                     for v, s in e.coeffs), e.const)
+                    for e in ref.index)
+        return TileRef(ref.buffer, idx, ref.tile)
+
+    relu_leaf.dst = rw(relu_leaf.dst)
+    relu_leaf.srcs = [rw(r) for r in relu_leaf.srcs]
+    bias_leaf_loop.body.append(relu_leaf)
+    kern.body = [mm_nest, bias_nest]
+    kern.verify()
+    schedule.fuse_epilogue(kern)
+    assert len(kern.body) == 2, "multi-statement leaf must refuse to fuse"
+    rng = np.random.default_rng(5)
+    a = rng.standard_normal((8, 8)).astype(np.float32)
+    b = rng.standard_normal((8, 8)).astype(np.float32)
+    c = rng.standard_normal((8,)).astype(np.float32)
+    out = backend_ref.run(kern, [a, b, c])[-1]
+    np.testing.assert_allclose(out, np.maximum(a @ b + c, 0), rtol=1e-4)
+
+
+def test_fuse_epilogue_unrelated_consumer_untouched():
+    """A second nest that does not consume the matmul's output stays
+    where it is (no producer/consumer hit -> no fusion)."""
+    g = _gemm_graph(8, 8, 8)
+    kern = lower_graph(g, LoweringOptions(tile_m=4, tile_n=4, tile_k=4))
+    n_before = len(kern.body)
+    schedule.fuse_epilogue(kern)          # nothing to fuse: single nest
+    assert len(kern.body) == n_before
+
+
+def test_split_composed_with_interchange():
+    """split then interchange of the two freshly-minted loops (and a
+    second split on top) must stay verifiable and exact — DSE composes
+    these programmatically."""
+    g = _gemm_graph(16, 8, 8)
+    kern = lower_graph(g, LoweringOptions(tile_m=2, tile_n=2, tile_k=2))
+    i, j, k = [l.var.name for l in kern.loops()]
+    schedule.split(kern, k, 2)            # k -> k_o x k_i (perfect pair)
+    schedule.interchange(kern, f"{k}_o", f"{k}_i")
+    schedule.split(kern, f"{k}_i", 2)     # split the (now outer) k_i again
+    kern.verify()
+    rng = np.random.default_rng(6)
+    a = rng.standard_normal((16, 8)).astype(np.float32)
+    b = rng.standard_normal((8, 8)).astype(np.float32)
+    (out,) = backend_ref.run(kern, [a, b])
+    np.testing.assert_allclose(out, a @ b, rtol=1e-4)
+
+
+def test_interchange_rejects_imperfect_nest():
+    g = _gemm_graph(8, 8, 8)
+    kern = lower_graph(g, LoweringOptions(tile_m=4, tile_n=4, tile_k=4))
+    i, j, k = [l.var.name for l in kern.loops()]
+    with pytest.raises(ValueError, match="not perfectly nested"):
+        schedule.interchange(kern, j, k)  # j's body: zero, k-loop, copy
+
+
+def test_split_rejects_non_divisor():
+    g = _gemm_graph(8, 8, 8)
+    kern = lower_graph(g, LoweringOptions(tile_m=4, tile_n=4, tile_k=4))
+    with pytest.raises(ValueError, match="does not divide"):
+        schedule.split(kern, kern.loops()[0].var.name, 3)
+
+
 def test_pipeline_parser():
     stages = parse_pipeline("lower{tile_m=4,tile_n=4,tile_k=2},"
                             "flatten-inner,grid{vars=2}")

@@ -70,14 +70,22 @@ def test_shardmap_moe_matches_gspmd():
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-4)
 
 
-@pytest.mark.xfail(
-    strict=False,
-    reason="known gspmd-vs-shardmap MoE divergence under 8 virtual devices: "
-           "max err ~8.8e-3 exceeds the 2e-4 tolerance (tracked in "
-           "CHANGES.md since PR 1); xfail keeps tier-1 green while the "
-           "gap stays visible in the report")
 def test_shardmap_moe_subprocess_multi_device():
-    """Run the cross-impl check under 8 virtual devices."""
+    """Run the cross-impl check under 8 virtual devices.
+
+    This was xfailed from PR 1 to PR 3 (max err ~8.8e-3 > 2e-4).  The
+    divergence was root-caused to the *gspmd* path, not shard_map: its
+    combine gathered expert outputs through an (E*capacity+1)-row
+    concatenate (a trailing trash row for dropped tokens), and GSPMD
+    mispartitions that odd-sized computed-index gather under a
+    model-sharded mesh — per-token routed contributions came back
+    wrong/zeroed while the shard_map path was bit-exact against the
+    unsharded oracle.  apply_moe now keeps the dispatch buffer exactly
+    E*capacity rows and masks dropped slots explicitly, which is
+    bit-exact under partitioning, so the two impls agree to f32
+    roundoff and the xfail is gone.  (Capacity drop ordering and psum
+    dtype — the original suspects — were ruled out: routing, keep masks
+    and the aux loss matched exactly throughout.)"""
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     code = (
         "import os;"
