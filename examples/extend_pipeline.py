@@ -1,8 +1,9 @@
 """Extensibility demo — the paper's "reusable and extensible" claim.
 
-Registers (1) a NEW TensorIR op and (2) a NEW scheduling pass from
-*outside* the core package, then compiles a kernel using both through
-the standard pipeline string.  No core files are modified.
+Registers (1) a NEW TensorIR op, (2) a NEW scheduling pass, and (3) a
+NEW canonicalization rewrite pattern from *outside* the core package,
+then compiles a kernel using all three through the standard pipeline
+string.  No core files are modified.
 
     python examples/extend_pipeline.py
 """
@@ -44,6 +45,35 @@ def _unroll_all(kernel):
     return kernel
 
 
+# ---- 3. a third-party canonicalization pattern ------------------------------
+# fold the no-op neg(neg(x)) chain: the canonicalize pass picks the rule
+# up at tensor level and reports its hits like any built-in pattern
+# (dead-op-elim then collects the orphaned inner neg).
+
+from repro.core import CANONICAL_PATTERNS, Pattern, register_canonical_pattern
+from repro.core.rewrite import replace_value_uses
+
+
+class FoldDoubleNeg(Pattern):
+    """Fold ``neg(neg(x))`` to ``x`` (third-party demo pattern)."""
+
+    name = "fold-double-neg"
+
+    def match_and_rewrite(self, parent, siblings, i, root):
+        op = siblings[i]
+        if getattr(op, "opname", None) != "neg":
+            return None
+        prod = op.inputs[0].producer
+        if prod is None or prod.opname != "neg":
+            return None
+        replace_value_uses(root, op.result, prod.inputs[0])
+        return (1, [])
+
+
+if not any(p.name == "fold-double-neg" for p in CANONICAL_PATTERNS["tensor"]):
+    register_canonical_pattern("tensor")(FoldDoubleNeg)
+
+
 def main():
     def f(a, b):
         return fe.matmul(a, b)
@@ -64,6 +94,15 @@ def main():
     (res2,) = g2.eval_np(np.asarray([-1.0, 2.0, -3.0, 4.0, 0.0, -0.5, 1.0,
                                      -2.0], np.float32))
     print("leaky_relu oracle:", res2)
+
+    # the third-party canonicalization pattern fires through the standard
+    # canonicalize pass, hit-counted like any built-in
+    g3 = trace(lambda x: -(-x), [spec((4,))])
+    res3 = run_pipeline(g3, "canonicalize")
+    assert res3.records[0].pattern_stats.get("fold-double-neg") == 1
+    assert not res3.artifact.ops, "neg(neg(x)) folds to the input"
+    print("third-party canonicalization pattern fired:",
+          res3.records[0].pattern_stats)
 
 
 if __name__ == "__main__":

@@ -31,6 +31,9 @@ from .passes import (PASS_ALIASES, PASS_REGISTRY, PassDef, PassError,
                      PassManager, PassRecord, PipelineResult, parse_pipeline,
                      register_pass, run_pipeline)
 from .pipeline import SCHEDULES, CompiledKernel, compile_gemm, compile_traced
+from .rewrite import (CANONICAL_PATTERNS, OneShotPattern, Pattern,
+                      RewriteDriver, RewriteError, RewriteStats, canonicalize,
+                      register_canonical_pattern)
 from .tensor_ir import Graph, OP_REGISTRY, TensorType, register_op
 
 __all__ = [
@@ -50,4 +53,7 @@ __all__ = [
     "Graph", "OP_REGISTRY", "TensorType", "register_op",
     "DseCandidate", "DsePoint", "DseResult", "DseValidation",
     "ResourceBudget", "enumerate_points", "explore", "pareto_frontier",
+    "CANONICAL_PATTERNS", "OneShotPattern", "Pattern", "RewriteDriver",
+    "RewriteError", "RewriteStats", "canonicalize",
+    "register_canonical_pattern",
 ]

@@ -24,6 +24,12 @@ into compiler infrastructure:
     cycle-accurately against the numpy oracle and cross-checks observed
     vs modeled cycles.
 
+Before pricing, design points are deduplicated by **canonical form**
+(:func:`dedupe_points`): two schedule programs whose canonicalized
+kernels print identically are spellings of one design (e.g.
+``grid{vars=2}`` vs ``grid{vars=3}`` when the extra grid loop has
+extent 1), so only the first is priced — and every elimination is
+recorded on ``DseResult.deduped`` and logged in the result table.
 Candidate pricing is memoized in a persistent on-disk cache keyed by
 (kernel text, machine, schedule program), and uncached points evaluate
 in parallel.  Entry points: :func:`explore` (library),
@@ -238,6 +244,67 @@ def _lower_nested(graph: Graph) -> Kernel:
     return PassManager.parse("lower").run(graph).artifact
 
 
+def canonical_key(graph: Graph, point: DsePoint,
+                  machine: MachineModel = TPU_V5E,
+                  hw: Optional[HwModule] = None) -> Optional[str]:
+    """Canonical-form dedupe key of a design point: the canonicalized
+    textual form of the *hardware* the point lowers to (HwIR knobs
+    applied).  Two schedule programs with the same key describe one
+    design — e.g. ``grid{vars=2}`` vs ``grid{vars=3}`` at full-dim
+    tiles, whose extra trip-1 stream sequencer collapses away.
+
+    Pass ``hw`` to key an already-built module (``explore`` builds each
+    point once and reuses it for pricing); the module itself is never
+    mutated (``canonical_text`` canonicalizes a re-parsed copy).
+    Returns ``None`` when the point's pipeline fails — such points are
+    kept so the caller records the real error.
+    """
+    from . import rewrite
+
+    try:
+        if hw is None:
+            _, hw = build_point(graph, point, machine)
+        return rewrite.canonical_text(hw)
+    except (PassError, ValueError, KeyError):
+        return None
+
+
+def _dedupe_by_key(points: Sequence[DsePoint],
+                   keys: Sequence[Optional[str]]
+                   ) -> Tuple[List[int], List[Tuple[DsePoint, DsePoint]]]:
+    """The one dedupe policy (first point with a key wins; ``None`` keys
+    — failed builds — are never deduped): index-level so both the
+    public :func:`dedupe_points` and :func:`explore` share it exactly.
+    Returns ``(kept_indices, dropped_pairs)``."""
+    seen: Dict[str, int] = {}
+    keep: List[int] = []
+    dropped: List[Tuple[DsePoint, DsePoint]] = []
+    for i, (pt, key) in enumerate(zip(points, keys)):
+        if key is not None and key in seen:
+            dropped.append((pt, points[seen[key]]))
+            continue
+        if key is not None:
+            seen[key] = i
+        keep.append(i)
+    return keep, dropped
+
+
+def dedupe_points(graph: Graph, points: Sequence[DsePoint],
+                  machine: MachineModel = TPU_V5E
+                  ) -> Tuple[List[DsePoint], List[Tuple[DsePoint, DsePoint]]]:
+    """Drop design points whose canonical form duplicates an earlier
+    point's.  Returns ``(kept, dropped)`` where each dropped entry pairs
+    the eliminated point with the kept point it duplicates — the caller
+    logs every elimination (no silent shrinkage of the search space).
+
+    Convenience wrapper (keys computed serially, uncached) over the same
+    :func:`_dedupe_by_key` policy ``explore`` uses; explore itself keys
+    off artifacts it already built and cached."""
+    keys = [canonical_key(graph, pt, machine) for pt in points]
+    keep, dropped = _dedupe_by_key(points, keys)
+    return [points[i] for i in keep], dropped
+
+
 def enumerate_points(graph: Graph,
                      tiles: Sequence[int] = DEFAULT_TILES,
                      unroll_factors: Sequence[int] = DEFAULT_UNROLL_FACTORS,
@@ -333,29 +400,49 @@ def _cache_key(graph_text: str, machine: MachineModel,
     return hashlib.sha256(blob.encode()).hexdigest()
 
 
-def _cache_load(path: str, point: DsePoint) -> Optional[DseCandidate]:
+def _cache_load(path: str, point: DsePoint
+                ) -> Tuple[Optional[DseCandidate], Optional[str]]:
+    """Load a cached pricing plus its canonical dedupe key (the key
+    rides in the cache so a warm explore never recompiles a point).
+    Deduped points cache a key-only entry: ``(None, key)``."""
     try:
         with open(path) as f:
             d = json.load(f)
-        return DseCandidate(
+    except (OSError, ValueError):
+        return None, None               # corrupt/missing entry
+    if not isinstance(d, dict):
+        return None, None               # valid JSON, wrong shape
+    key = d.get("canonical_key")
+    try:
+        cand = DseCandidate(
             point=point, cycles=CycleReport(**d["cycles"]),
             resources=ResourceReport(**d["resources"]), area=d["area"],
             dbuf_bytes=d["dbuf_bytes"], feasible=d["feasible"], cached=True)
-    except (OSError, ValueError, KeyError, TypeError):
-        return None                     # corrupt/missing entry: re-price
+    except (ValueError, KeyError, TypeError):
+        cand = None                     # key-only entry (or stale format)
+    return cand, key
 
 
-def _cache_store(path: str, cand: DseCandidate) -> None:
+def _cache_store(path: str, cand: Optional[DseCandidate],
+                 canonical_key: Optional[str] = None,
+                 point: Optional[DsePoint] = None) -> None:
+    """Persist a pricing (or, with ``cand=None``, just a point's
+    canonical key — enough for the next explore to dedupe it without
+    recompiling)."""
+    pt = cand.point if cand is not None else point
+    entry = {"spec": pt.spec, "family": pt.family,
+             "canonical_key": canonical_key}
+    if cand is not None:
+        entry.update({
+            "cycles": dataclasses.asdict(cand.cycles),
+            "resources": dataclasses.asdict(cand.resources),
+            "area": cand.area, "dbuf_bytes": cand.dbuf_bytes,
+            "feasible": cand.feasible})
     try:
         os.makedirs(os.path.dirname(path), exist_ok=True)
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
-            json.dump({
-                "spec": cand.point.spec, "family": cand.point.family,
-                "cycles": dataclasses.asdict(cand.cycles),
-                "resources": dataclasses.asdict(cand.resources),
-                "area": cand.area, "dbuf_bytes": cand.dbuf_bytes,
-                "feasible": cand.feasible}, f)
+            json.dump(entry, f)
         os.replace(tmp, path)
     except OSError:
         pass                            # cache is best-effort
@@ -376,9 +463,13 @@ def build_point(graph: Graph, point: DsePoint,
 
 
 def evaluate(graph: Graph, point: DsePoint, machine: MachineModel,
-             budget: ResourceBudget) -> DseCandidate:
-    """Price one design point structurally (no execution)."""
-    _, hw = build_point(graph, point, machine)
+             budget: ResourceBudget,
+             built: Optional[Tuple[Kernel, HwModule]] = None) -> DseCandidate:
+    """Price one design point structurally (no execution).  ``built``
+    reuses an already-lowered (kernel, hw) pair instead of recompiling
+    (``explore`` builds each point exactly once)."""
+    _, hw = built if built is not None else \
+        build_point(graph, point, machine)
     cyc = machine_model.cycles(hw, machine)
     try:
         res = machine_model.resources(hw, machine)
@@ -430,6 +521,10 @@ class DseResult:
     candidates: List[DseCandidate]
     errors: List[Tuple[DsePoint, str]]
     validations: List[DseValidation]
+    #: (eliminated, kept) pairs from the canonical-form dedupe — every
+    #: shrink of the explored space is recorded, never silent
+    deduped: List[Tuple[DsePoint, DsePoint]] = \
+        dataclasses.field(default_factory=list)
 
     @property
     def frontier(self) -> List[DseCandidate]:
@@ -446,8 +541,18 @@ class DseResult:
         rows = [f"// dse {self.graph_name} on {self.machine.name}: "
                 f"{len(self.candidates)} candidates "
                 f"({sum(c.cached for c in self.candidates)} cached, "
-                f"{len(self.errors)} failed), "
+                f"{len(self.errors)} failed, "
+                f"{len(self.deduped)} deduped), "
                 f"{len(self.frontier)} on the Pareto frontier"]
+        if self.deduped:
+            total = len(self.candidates) + len(self.errors) \
+                + len(self.deduped)
+            rows.append(f"// canonical-form dedupe eliminated "
+                        f"{len(self.deduped)} of {total} design points "
+                        f"before pricing:")
+            for gone, kept in self.deduped:
+                rows.append(f"//   dedupe {gone.family}: {gone.spec}  ==  "
+                            f"{kept.family}: {kept.spec}")
         hdr = (f"{'':2s}{'FAMILY':16s} {'CYCLES':>12s} {'AREA':>10s} "
                f"{'LANES':>6s} {'REGBITS':>8s} {'VMEM':>7s} {'FSM':>5s}  "
                f"SCHEDULE PROGRAM")
@@ -545,37 +650,75 @@ def explore(graph: Graph, machine: MachineModel = TPU_V5E,
     points = enumerate_points(graph, tiles=tiles)
     gtext = ir_text.print_ir(graph)
     cdir = cache_dir or _default_cache_dir()
+    nworkers = workers or min(8, os.cpu_count() or 1)
+
+    def path_of(i: int) -> str:
+        return os.path.join(cdir, _cache_key(gtext, machine, points[i],
+                                             budget) + ".json")
 
     cands: List[Optional[DseCandidate]] = [None] * len(points)
+    ckeys: List[Optional[str]] = [None] * len(points)
     errors: List[Tuple[DsePoint, str]] = []
-    todo: List[int] = []
+    failed: set = set()
+    built: Dict[int, Tuple[Kernel, HwModule]] = {}
+
+    to_build: List[int] = []
     for i, pt in enumerate(points):
         if use_cache:
-            path = os.path.join(cdir, _cache_key(gtext, machine, pt,
-                                                 budget) + ".json")
-            cands[i] = _cache_load(path, pt)
-        if cands[i] is None:
-            todo.append(i)
+            cands[i], ckeys[i] = _cache_load(path_of(i), pt)
+        if ckeys[i] is None:
+            to_build.append(i)
+
+    # build every uncached point exactly once (parallel); the lowered
+    # artifacts feed both the canonical dedupe key and the pricing below
+    def build(i: int) -> None:
+        try:
+            built[i] = build_point(graph, points[i], machine)
+            ckeys[i] = canonical_key(graph, points[i], machine,
+                                     hw=built[i][1])
+        except (PassError, ValueError, KeyError) as e:
+            errors.append((points[i], str(e)))
+            failed.add(i)
+
+    if to_build:
+        with ThreadPoolExecutor(max_workers=nworkers) as ex:
+            list(ex.map(build, to_build))
+
+    # canonical-form dedupe *before* pricing — every elimination logged
+    # (failed builds sit in `errors`, not in the dedupe or the pricing)
+    kept_idx, deduped = _dedupe_by_key(
+        points, [None if i in failed else k for i, k in enumerate(ckeys)])
+    keep = [i for i in kept_idx if i not in failed]
+    dropped_idx = set(range(len(points))) - set(kept_idx)
+    if use_cache:
+        for i in dropped_idx & set(to_build):
+            # key-only entry: the next explore dedupes this point
+            # straight from the cache, compiling nothing
+            _cache_store(path_of(i), None, ckeys[i], point=points[i])
 
     def price(i: int) -> Optional[DseCandidate]:
         try:
-            return evaluate(graph, points[i], machine, budget)
+            return evaluate(graph, points[i], machine, budget,
+                            built=built.get(i))
         except (PassError, ValueError, KeyError) as e:
             errors.append((points[i], str(e)))
             return None
 
-    nworkers = workers or min(8, os.cpu_count() or 1)
-    if todo:
+    to_price = [i for i in keep if cands[i] is None]
+    if to_price:
         with ThreadPoolExecutor(max_workers=nworkers) as ex:
-            for i, cand in zip(todo, ex.map(price, todo)):
+            for i, cand in zip(to_price, ex.map(price, to_price)):
                 cands[i] = cand
                 if cand is not None and use_cache:
-                    path = os.path.join(
-                        cdir, _cache_key(gtext, machine, points[i],
-                                         budget) + ".json")
-                    _cache_store(path, cand)
+                    _cache_store(path_of(i), cand, ckeys[i])
+    if use_cache:
+        # refresh pre-canonical-key cache entries so the next explore is
+        # fully warm (no rebuild just to recover the dedupe key)
+        for i in keep:
+            if i in to_build and cands[i] is not None and cands[i].cached:
+                _cache_store(path_of(i), cands[i], ckeys[i])
 
-    priced = [c for c in cands if c is not None]
+    priced = [cands[i] for i in keep if cands[i] is not None]
     for c in pareto_frontier(priced):
         c.on_frontier = True
 
@@ -588,4 +731,4 @@ def explore(graph: Graph, machine: MachineModel = TPU_V5E,
                 cycle_tol_pct=cycle_tol_pct))
     return DseResult(graph_name=graph.name, machine=machine, budget=budget,
                      candidates=priced, errors=errors,
-                     validations=validations)
+                     validations=validations, deduped=deduped)

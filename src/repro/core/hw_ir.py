@@ -225,6 +225,20 @@ class HwOperand:
 class HwCtrl:
     """Base class of control-tree nodes."""
 
+    # ---- rewrite-core structural protocol (see core/rewrite.py) -----------
+
+    def children(self) -> List["HwCtrl"]:
+        return []
+
+    def rebuild(self, children: Sequence["HwCtrl"]) -> "HwCtrl":
+        assert not children
+        return dataclasses.replace(self)
+
+    def is_equivalent(self, other) -> bool:
+        from . import ir_text
+        return isinstance(other, HwCtrl) and \
+            ir_text.print_hw_ctrl(self) == ir_text.print_hw_ctrl(other)
+
 
 @dataclasses.dataclass
 class HwStep(HwCtrl):
@@ -253,6 +267,12 @@ class HwLoop(HwCtrl):
     def __post_init__(self):
         if self.kind not in LOOP_CTRL_KINDS:
             raise ValueError(f"loop %{self.counter}: bad kind {self.kind!r}")
+
+    def children(self) -> List[HwCtrl]:
+        return self.body
+
+    def rebuild(self, children: Sequence[HwCtrl]) -> "HwLoop":
+        return HwLoop(self.counter, self.trips, self.kind, list(children))
 
     @property
     def counter_bits(self) -> int:
@@ -305,6 +325,22 @@ class HwModule:
             if u.name == name:
                 return u
         raise KeyError(f"no unit named {name!r} in module {self.name}")
+
+    # ---- rewrite-core structural protocol (see core/rewrite.py) -----------
+
+    def children(self) -> List[HwCtrl]:
+        """The module's mutable top-level control list."""
+        return self.ctrl
+
+    def rebuild(self, children: Sequence[HwCtrl]) -> "HwModule":
+        return HwModule(self.name, list(self.ports), list(self.regs),
+                        list(self.mems), list(self.units), list(children))
+
+    def is_equivalent(self, other) -> bool:
+        """Structural equivalence: identical canonical textual form."""
+        from . import ir_text
+        return isinstance(other, HwModule) and \
+            ir_text.print_hw_module(self) == ir_text.print_hw_module(other)
 
     # ---- traversal ---------------------------------------------------------
 
@@ -588,16 +624,15 @@ def set_sequencer(mod: HwModule, counter: str, kind: str) -> HwModule:
         raise ValueError(
             f"set-sequencer: kind must be 'fsm' or 'stream', got {kind!r} "
             f"(spatial sequencers are fixed at lower-to-hw time)")
-    for loop in mod.loops():
-        if loop.counter == counter:
-            if loop.kind not in ("fsm", "stream"):
-                raise ValueError(
-                    f"set-sequencer: loop %{counter} is @{loop.kind} "
-                    f"(spatial), not a temporal sequencer")
-            loop.kind = kind
-            mod.verify()
-            return mod
-    raise KeyError(f"no loop counter %{counter} in module {mod.name}")
+    # lazy import: rewrite.py imports this module for its pattern classes
+    from .rewrite import RewriteDriver, SetSequencer
+
+    pat = SetSequencer(counter, kind)
+    RewriteDriver([pat], max_iterations=2).run(mod)
+    if not pat.applied:
+        raise KeyError(f"no loop counter %{counter} in module {mod.name}")
+    mod.verify()
+    return mod
 
 
 # --------------------------------------------------------------------------

@@ -213,6 +213,14 @@ def ir_size(x) -> Optional[int]:
     return None
 
 
+def format_pattern_stats(hits: Dict[str, int]) -> str:
+    """Canonical rendering of rewrite-pattern hit counts for IR dumps and
+    timing tables: ``"drop-unit-loop x3, dedupe-units x1"`` (most-hit
+    first, name-sorted on ties; empty string when nothing fired)."""
+    return ", ".join(f"{name} x{n}" for name, n in
+                     sorted(hits.items(), key=lambda kv: (-kv[1], kv[0])))
+
+
 # --------------------------------------------------------------------------
 # parsing helpers
 # --------------------------------------------------------------------------

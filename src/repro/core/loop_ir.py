@@ -141,6 +141,20 @@ class Stmt:
         from . import ir_text
         return "\n".join(ir_text.print_stmt(self))
 
+    # ---- rewrite-core structural protocol (see core/rewrite.py) -----------
+
+    def children(self) -> List["Stmt"]:
+        return []
+
+    def rebuild(self, children: Sequence["Stmt"]) -> "Stmt":
+        assert not children
+        return dataclasses.replace(self)
+
+    def is_equivalent(self, other) -> bool:
+        from . import ir_text
+        return isinstance(other, Stmt) and \
+            ir_text.print_stmt(self) == ir_text.print_stmt(other)
+
 
 @dataclasses.dataclass
 class ZeroTile(Stmt):
@@ -188,6 +202,12 @@ class Loop(Stmt):
     var: LoopVar
     kind: LoopKind
     body: List[Stmt]
+
+    def children(self) -> List[Stmt]:
+        return self.body
+
+    def rebuild(self, children: Sequence[Stmt]) -> "Loop":
+        return Loop(self.var, self.kind, list(children))
 
 
 @dataclasses.dataclass
@@ -239,6 +259,22 @@ class Kernel:
                         ref.slices({v: 0 for v in loop_env})
 
         check(self.body, {})
+
+    # ---- rewrite-core structural protocol (see core/rewrite.py) -----------
+
+    def children(self) -> List[Stmt]:
+        """The kernel's mutable top-level statement list."""
+        return self.body
+
+    def rebuild(self, children: Sequence[Stmt]) -> "Kernel":
+        return Kernel(self.name, list(self.params), list(self.outputs),
+                      list(self.scratch), list(children))
+
+    def is_equivalent(self, other) -> bool:
+        """Structural equivalence: identical canonical textual form."""
+        from . import ir_text
+        return isinstance(other, Kernel) and \
+            ir_text.print_kernel(self) == ir_text.print_kernel(other)
 
     # ---- traversal helpers ---------------------------------------------------
 

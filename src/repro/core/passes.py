@@ -26,13 +26,15 @@ the core (the paper's stated goal for the infrastructure).
 from __future__ import annotations
 
 import dataclasses
+import difflib
 import re
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
-from . import backend_jax, backend_pallas, backend_ref, hw_ir, lowering, schedule
+from . import (backend_jax, backend_pallas, backend_ref, hw_ir, lowering,
+               rewrite, schedule)
 from .hw_ir import HwModule
 from .loop_ir import Kernel, LoopKind, MemSpace
 from .tensor_ir import Graph
@@ -52,9 +54,29 @@ class PassError(ValueError):
 @dataclasses.dataclass(frozen=True)
 class PassDef:
     name: str
-    level: str                       # "tensor" | "loop" | "hw" | "backend"
+    #: the IR level(s) the pass consumes — a single name, or a tuple for
+    #: level-agnostic passes (``canonicalize`` runs at tensor/loop/hw)
+    level: Union[str, Tuple[str, ...]]
     fn: Callable[..., Artifact]
     doc: str = ""
+    #: names of the rewrite patterns the pass is built from — a tuple,
+    #: or a zero-arg callable resolved on read so registries that grow
+    #: after import (``register_canonical_pattern``) stay visible in
+    #: ``reproc --list-passes`` and the generated docs
+    patterns: Union[Tuple[str, ...], Callable[[], Tuple[str, ...]]] = ()
+
+    @property
+    def pattern_names(self) -> Tuple[str, ...]:
+        return tuple(self.patterns() if callable(self.patterns)
+                     else self.patterns)
+
+    @property
+    def levels(self) -> Tuple[str, ...]:
+        return (self.level,) if isinstance(self.level, str) else self.level
+
+    @property
+    def level_str(self) -> str:
+        return "/".join(self.levels)
 
 
 PASS_REGISTRY: Dict[str, PassDef] = {}
@@ -66,15 +88,22 @@ PASS_ALIASES: Dict[str, str] = {
 }
 
 
-def register_pass(name: str, level: str, doc: str = ""):
-    """Register ``fn`` as pass ``name`` at IR ``level``.
+def register_pass(name: str, level: Union[str, Tuple[str, ...]],
+                  doc: str = "", patterns=()):
+    """Register ``fn`` as pass ``name`` at IR ``level`` (a level name or
+    a tuple of levels for level-agnostic passes).
 
     ``doc`` defaults to the first line of the function's docstring so the
     generated pass reference (``reproc --list-passes``) is never empty.
+    ``patterns`` names the rewrite patterns the pass is built from —
+    pass a zero-arg callable to resolve the list lazily (used by
+    ``canonicalize``, whose pattern registry is runtime-extensible).
     """
-    if level not in LEVELS:
-        raise ValueError(f"pass {name!r}: level must be one of {LEVELS}, "
-                         f"got {level!r}")
+    levels = (level,) if isinstance(level, str) else tuple(level)
+    for lv in levels:
+        if lv not in LEVELS:
+            raise ValueError(f"pass {name!r}: level must be one of {LEVELS}, "
+                             f"got {lv!r}")
 
     def deco(fn):
         if name in PASS_REGISTRY:
@@ -84,15 +113,26 @@ def register_pass(name: str, level: str, doc: str = ""):
             lines = (fn.__doc__ or "").strip().splitlines()
             d = lines[0].strip() if lines else ""
         PASS_REGISTRY[name] = PassDef(name, level, fn,
-                                      d or f"(undocumented {level} pass)")
+                                      d or f"(undocumented {level} pass)",
+                                      patterns if callable(patterns)
+                                      else tuple(patterns))
         return fn
     return deco
+
+
+def suggest_pass(name: str) -> Optional[str]:
+    """Closest registered pass/alias name, for did-you-mean diagnostics."""
+    universe = sorted(set(PASS_REGISTRY) | set(PASS_ALIASES))
+    close = difflib.get_close_matches(name, universe, n=1, cutoff=0.5)
+    return close[0] if close else None
 
 
 def resolve_pass(name: str) -> PassDef:
     pd = PASS_REGISTRY.get(PASS_ALIASES.get(name, name))
     if pd is None:
-        raise KeyError(f"unknown pass {name!r}; "
+        sugg = suggest_pass(name)
+        hint = f"did you mean {sugg!r}? " if sugg else ""
+        raise KeyError(f"unknown pass {name!r}; {hint}"
                        f"registered: {sorted(PASS_REGISTRY)}")
     return pd
 
@@ -108,32 +148,38 @@ def _lower(g: Graph, tile_m: int = 1, tile_n: int = 1, tile_k: int = 1,
         use_accumulator=bool(use_accumulator)))
 
 
-@register_pass("flatten-inner", "loop", "paper's inner-loop flattening")
+@register_pass("flatten-inner", "loop", "paper's inner-loop flattening",
+               patterns=("set-loop-kind",))
 def _flatten(k: Kernel) -> Kernel:
     return schedule.flatten_inner(k)
 
 
-@register_pass("unroll", "loop", "unroll a named loop")
+@register_pass("unroll", "loop", "unroll a named loop",
+               patterns=("set-loop-kind",))
 def _unroll(k: Kernel, var: str) -> Kernel:
     return schedule.unroll(k, var)
 
 
-@register_pass("vectorize", "loop", "map a named loop to VPU lanes")
+@register_pass("vectorize", "loop", "map a named loop to VPU lanes",
+               patterns=("set-loop-kind",))
 def _vectorize(k: Kernel, var: str) -> Kernel:
     return schedule.vectorize(k, var)
 
 
-@register_pass("split", "loop", "split a named loop by a factor")
+@register_pass("split", "loop", "split a named loop by a factor",
+               patterns=("split-loop",))
 def _split(k: Kernel, var: str, factor: int) -> Kernel:
     return schedule.split(k, var, factor)
 
 
-@register_pass("interchange", "loop", "swap two perfectly nested loops")
+@register_pass("interchange", "loop", "swap two perfectly nested loops",
+               patterns=("interchange-loops",))
 def _interchange(k: Kernel, outer: str, inner: str) -> Kernel:
     return schedule.interchange(k, outer, inner)
 
 
-@register_pass("fuse-epilogue", "loop", "fuse elementwise tail into matmul nest")
+@register_pass("fuse-epilogue", "loop", "fuse elementwise tail into matmul nest",
+               patterns=("fuse-epilogue",))
 def _fuse(k: Kernel) -> Kernel:
     return schedule.fuse_epilogue(k)
 
@@ -179,9 +225,25 @@ def _emit_verilog(mod: HwModule) -> str:
 
 
 @register_pass("set-sequencer", "hw",
-               "re-sequence a loop between @fsm and @stream")
+               "re-sequence a loop between @fsm and @stream",
+               patterns=("set-sequencer",))
 def _set_sequencer(mod: HwModule, counter: str, kind: str) -> HwModule:
     return hw_ir.set_sequencer(mod, counter, kind)
+
+
+@register_pass("canonicalize", ("tensor", "loop", "hw"),
+               "apply the level's canonicalization patterns to a fixpoint",
+               patterns=rewrite.canonical_pattern_names)
+def _canonicalize(art, max_iterations: int = 32):
+    """Drive the artifact level's registered canonicalization pattern
+    set (``rewrite.CANONICAL_PATTERNS``) to a fixpoint: TensorIR folds
+    identity epilogues and dead ops, LoopIR drops extent-1 loops,
+    merges independent adjacent @seq nests and normalizes tile refs,
+    HwIR collapses single-trip sequencers, normalizes address
+    generators and shares identical datapath units.  The one pass
+    registered at all three levels; per-pattern hit counts surface on
+    the ``PassRecord``."""
+    return rewrite.canonicalize(art, max_iterations=max_iterations)
 
 
 @register_pass("dse", "tensor",
@@ -263,39 +325,73 @@ def _emit_pallas(k: Kernel, interpret: int = 1):
 _STAGE_RE = re.compile(r"^([a-zA-Z_][\w\-]*)(?:\{(.*)\})?$")
 
 
+class PipelineParseError(ValueError):
+    """Malformed pipeline spec; the message names the offending offset."""
+
+    def __init__(self, spec: str, offset: int, msg: str):
+        super().__init__(f"pipeline spec: {msg} at offset {offset}: "
+                         f"{spec!r}")
+        self.offset = offset
+
+
 def parse_pipeline(spec: str) -> List[Dict[str, Any]]:
     """``"lower{tile_m=128},flatten-inner"`` -> [{name, kwargs}, ...].
 
     Stages separate on ``,`` or ``;`` at brace depth 0 (``;`` matches
     mlir-opt-style specs on the command line, where ``,`` also separates
-    pass arguments).
+    pass arguments).  Malformed specs — unbalanced or nested braces,
+    stray separators producing empty stages, malformed ``key=value``
+    arguments — raise :class:`PipelineParseError` naming the offending
+    character offset.
     """
-    stages = []
+    # ---- lex into (start_offset, text) parts, brace-aware ------------------
     depth = 0
+    open_at = -1
     token = ""
-    parts: List[str] = []
-    for ch in spec:
+    start = 0
+    parts: List[Tuple[int, str]] = []
+    for off, ch in enumerate(spec):
         if ch == "{":
-            depth += 1
+            if depth:
+                raise PipelineParseError(spec, off, "nested '{'")
+            depth, open_at = 1, off
         elif ch == "}":
-            depth -= 1
+            if not depth:
+                raise PipelineParseError(spec, off, "unbalanced '}'")
+            depth = 0
         if ch in ",;" and depth == 0:
-            parts.append(token)
-            token = ""
+            if not token.strip():
+                raise PipelineParseError(
+                    spec, off, f"empty pipeline stage before {ch!r}")
+            parts.append((start, token))
+            token, start = "", off + 1
         else:
             token += ch
+    if depth:
+        raise PipelineParseError(spec, open_at, "unclosed '{'")
     if token.strip():
-        parts.append(token)
-    for part in parts:
+        parts.append((start, token))
+
+    # ---- parse each stage ---------------------------------------------------
+    stages = []
+    for off, part in parts:
         m = _STAGE_RE.match(part.strip())
         if not m:
-            raise ValueError(f"bad pipeline stage {part!r}")
+            raise PipelineParseError(spec, off,
+                                     f"bad pipeline stage {part.strip()!r}")
         name, argstr = m.group(1), m.group(2)
         kwargs: Dict[str, Any] = {}
+        if argstr is not None and not argstr.strip():
+            raise PipelineParseError(spec, off,
+                                     f"empty argument braces on {name!r}")
         if argstr:
             for kv in argstr.split(","):
-                key, _, val = kv.partition("=")
+                key, eq, val = kv.partition("=")
                 key, val = key.strip(), val.strip()
+                if not key or not eq or not val:
+                    raise PipelineParseError(
+                        spec, off, f"bad pass argument {kv.strip()!r} on "
+                                   f"{name!r} (want key=value)")
                 kwargs[key] = int(val) if re.fullmatch(r"-?\d+", val) else val
         stages.append({"name": name, "kwargs": kwargs})
     return stages
@@ -330,12 +426,20 @@ class PassRecord:
     size_after: Optional[int]
     dump_before: Optional[str] = None
     dump_after: Optional[str] = None
+    #: per-pattern hit counts from every RewriteDriver the pass ran
+    pattern_stats: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def summary(self) -> str:
+        from . import ir_text
+
         def sz(v):
             return "-" if v is None else str(v)
-        return (f"{self.name:16s} [{self.level:7s}] {self.wall_ms:8.3f} ms  "
+        line = (f"{self.name:16s} [{self.level:7s}] {self.wall_ms:8.3f} ms  "
                 f"size {sz(self.size_before)} -> {sz(self.size_after)}")
+        if self.pattern_stats:
+            line += ("  patterns: "
+                     + ir_text.format_pattern_stats(self.pattern_stats))
+        return line
 
 
 @dataclasses.dataclass
@@ -402,18 +506,23 @@ class PassManager:
 
     # ---- execution ---------------------------------------------------------
 
+    @staticmethod
+    def _level_type(level: str) -> type:
+        if level == "tensor":
+            return Graph
+        if level == "hw":
+            return HwModule
+        return Kernel               # "loop" and "backend" consume LoopIR
+
     def _check_level(self, pd: PassDef, art: Artifact) -> None:
-        if pd.level == "tensor":
-            want: type = Graph
-        elif pd.level == "hw":
-            want = HwModule
-        else:                       # "loop" and "backend" consume LoopIR
-            want = Kernel
-        if not isinstance(art, want):
+        wants = tuple(dict.fromkeys(self._level_type(lv)
+                                    for lv in pd.levels))
+        if not isinstance(art, wants):
             have = type(art).__name__
+            names = " or ".join(w.__name__ for w in wants)
             raise PassError(
-                f"pass {pd.name!r} is a {pd.level}-level pass and needs a "
-                f"{want.__name__}, but the pipeline artifact is {have} — "
+                f"pass {pd.name!r} is a {pd.level_str}-level pass and needs "
+                f"a {names}, but the pipeline artifact is {have} — "
                 f"check pass ordering (backend passes are terminal)")
 
     def _verify(self, pd: PassDef, art: Artifact, when: str) -> None:
@@ -442,12 +551,16 @@ class PassManager:
                          if isinstance(art, (Graph, Kernel, HwModule)) else "== input ==")
         for pd, kwargs in self._stages:
             self._check_level(pd, art)
+            # multi-level passes record the level they actually ran at
+            level = (pd.level if isinstance(pd.level, str)
+                     else rewrite.level_of(art))
             size_before = _artifact_size(art)
             dump_before = (_artifact_text(art)
                            if self.dump_before_each else None)
             t0 = time.perf_counter()
             try:
-                art = pd.fn(art, **kwargs)
+                with rewrite.collect_stats() as pattern_stats:
+                    art = pd.fn(art, **kwargs)
             except PassError:
                 raise
             except (ValueError, KeyError, TypeError) as e:
@@ -457,10 +570,11 @@ class PassManager:
             dump_after = (_artifact_text(art)
                           if self.dump_after_each else None)
             records.append(PassRecord(
-                name=pd.name, level=pd.level, kwargs=dict(kwargs),
+                name=pd.name, level=level, kwargs=dict(kwargs),
                 wall_ms=wall_ms, size_before=size_before,
                 size_after=_artifact_size(art),
-                dump_before=dump_before, dump_after=dump_after))
+                dump_before=dump_before, dump_after=dump_after,
+                pattern_stats=pattern_stats))
             if self.dump_after_each:
                 if isinstance(art, (Graph, Kernel, HwModule)):
                     trace.append(f"== after {pd.name} ==\n{dump_after}")

@@ -117,7 +117,15 @@ def compile_traced(fn_or_graph, in_specs: Optional[Sequence[spec]] = None,
                    machine: MachineModel = TPU_V5E,
                    want_jax: bool = True,
                    want_pallas: bool = True,
-                   interpret: bool = True) -> CompiledKernel:
+                   interpret: bool = True,
+                   canonicalize: bool = False) -> CompiledKernel:
+    """Compile through the full stack; with ``canonicalize=True`` the
+    level-agnostic ``canonicalize`` pass runs between lowerings (on the
+    TensorIR input, on the scheduled LoopIR, and on the HwIR module) —
+    semantics are preserved (cosim-checked in the test suite) but the
+    canonical form may drop degenerate structure (extent-1 loops,
+    duplicate datapath units), so modeled cycles/resources can differ
+    from the uncanonicalized spelling."""
     if isinstance(fn_or_graph, Graph):
         graph = fn_or_graph
     else:
@@ -127,9 +135,16 @@ def compile_traced(fn_or_graph, in_specs: Optional[Sequence[spec]] = None,
                     else {"m": 128, "n": 128, "k": 128})
     # clamp tiles to the actual problem inside lowering
     pipe = _pipeline_for(schedule, tile)
+    if canonicalize:
+        pipe = f"canonicalize,{pipe},canonicalize"
     pres = PassManager.parse(pipe).run(graph)
     kernel = pres.artifact
     hw = hw_ir.lower_to_hw(kernel, mxu_min_dim=machine.mxu_min_dim)
+    records = list(pres.records)
+    if canonicalize:
+        hwres = PassManager().add("canonicalize").run(hw)
+        hw = hwres.artifact
+        records += hwres.records
     cyc = machine_model.cycles(hw, machine)
     res = machine_model.resources(hw, machine)
     run_ref = lambda *xs: backend_ref.run(kernel, xs)
@@ -146,7 +161,7 @@ def compile_traced(fn_or_graph, in_specs: Optional[Sequence[spec]] = None,
         cycles=cyc, resources=res, flops=machine_model.flops(kernel),
         hbm_bytes=machine_model.hbm_bytes(kernel),
         run_ref=run_ref, run_jax=run_jax, run_pallas=run_pal,
-        machine=machine, pass_records=pres.records)
+        machine=machine, pass_records=records)
 
 
 def compile_gemm(m: int, n: int, k: int, schedule: str = "tpu_mxu",
@@ -155,7 +170,8 @@ def compile_gemm(m: int, n: int, k: int, schedule: str = "tpu_mxu",
                  machine: MachineModel = TPU_V5E,
                  interpret: bool = True,
                  want_jax: bool = True,
-                 want_pallas: bool = True) -> CompiledKernel:
+                 want_pallas: bool = True,
+                 canonicalize: bool = False) -> CompiledKernel:
     """The paper's GEMM case study, parameterised by schedule/epilogue."""
     from . import frontend as fe
 
@@ -176,7 +192,7 @@ def compile_gemm(m: int, n: int, k: int, schedule: str = "tpu_mxu",
     g = trace(f, specs, name=f"gemm_{m}x{n}x{k}_{epilogue}")
     return compile_traced(g, schedule=schedule, tile=tile, machine=machine,
                           interpret=interpret, want_jax=want_jax,
-                          want_pallas=want_pallas)
+                          want_pallas=want_pallas, canonicalize=canonicalize)
 
 
 from .loop_ir import Kernel  # noqa: E402

@@ -87,20 +87,36 @@ def passes_markdown() -> str:
         "hw": "Consume **HwIR** (`HwModule`); `emit-verilog` prints RTL text.",
         "backend": "Terminal: turn a scheduled `Kernel` into a callable.",
     }
+
+    def pattern_cell(pd, level):
+        # a multi-level pass lists only the patterns of the section's level
+        names = [p for p in pd.pattern_names
+                 if ":" not in p or p.startswith(f"{level}:")]
+        names = [p.split(":", 1)[-1] for p in names]
+        return ", ".join(f"`{n}`" for n in names) if names else "—"
+
     for level in LEVELS:
         defs = sorted((pd for pd in PASS_REGISTRY.values()
-                       if pd.level == level), key=lambda pd: pd.name)
+                       if level in pd.levels), key=lambda pd: pd.name)
         if not defs:
             continue
         lines.append(f"## {level}-level passes")
         lines.append("")
         lines.append(level_blurb[level])
         lines.append("")
-        lines.append("| pass | description |")
-        lines.append("|------|-------------|")
+        lines.append("| pass | rewrite patterns | description |")
+        lines.append("|------|------------------|-------------|")
         for pd in defs:
-            lines.append(f"| `{pd.name}` | {pd.doc} |")
+            note = (" *(runs at every IR level)*"
+                    if len(pd.levels) > 1 else "")
+            lines.append(f"| `{pd.name}` | {pattern_cell(pd, level)} | "
+                         f"{pd.doc}{note} |")
         lines.append("")
+    lines.append("Passes built on the unified rewrite core "
+                 "(`repro/core/rewrite.py`) list their pattern set; see "
+                 "[REWRITE.md](REWRITE.md) for the pattern reference and "
+                 "per-pattern hit statistics.")
+    lines.append("")
     if PASS_ALIASES:
         lines.append("## Aliases")
         lines.append("")
@@ -113,13 +129,15 @@ def passes_markdown() -> str:
 
 
 def _list_passes_text() -> str:
-    rows = [f"{'PASS':18s} {'LEVEL':8s} DESCRIPTION"]
+    rows = [f"{'PASS':18s} {'LEVEL':15s} {'PATTERNS':9s} DESCRIPTION"]
     order = {lv: i for i, lv in enumerate(LEVELS)}
     for pd in sorted(PASS_REGISTRY.values(),
-                     key=lambda pd: (order[pd.level], pd.name)):
-        rows.append(f"{pd.name:18s} {pd.level:8s} {pd.doc}")
+                     key=lambda pd: (order[pd.levels[0]], pd.name)):
+        npat = str(len(pd.pattern_names)) if pd.pattern_names else "-"
+        rows.append(f"{pd.name:18s} {pd.level_str:15s} {npat:9s} {pd.doc}")
     for alias in sorted(PASS_ALIASES):
-        rows.append(f"{alias:18s} {'alias':8s} -> {PASS_ALIASES[alias]}")
+        rows.append(f"{alias:18s} {'alias':15s} {'':9s} "
+                    f"-> {PASS_ALIASES[alias]}")
     return "\n".join(rows)
 
 
@@ -227,7 +245,7 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--epilogue", choices=("none", "relu", "bias_relu"),
                    default="bias_relu",
                    help="epilogue for the built-in GEMM input")
-    p.add_argument("--emit", choices=_EMIT_LEVELS, metavar="LEVEL",
+    p.add_argument("--emit", metavar="LEVEL",
                    help="lower the final artifact to LEVEL (tensor|loop|"
                         "hw|verilog) with default passes before printing")
     p.add_argument("--dse", nargs="?", const=4, type=int, metavar="N",
@@ -306,6 +324,14 @@ def _run(args, out) -> int:
 
     if args.markdown and not args.list_passes:
         print("error: --markdown requires --list-passes", file=sys.stderr)
+        return 2
+    if args.emit and args.emit not in _EMIT_LEVELS:
+        import difflib
+        close = difflib.get_close_matches(args.emit, _EMIT_LEVELS, n=1,
+                                          cutoff=0.5)
+        hint = f"; did you mean {close[0]!r}?" if close else ""
+        print(f"error: --emit: invalid choice {args.emit!r}{hint} "
+              f"(choose from {', '.join(_EMIT_LEVELS)})", file=sys.stderr)
         return 2
     if (args.trace or args.vcd) and not args.simulate:
         flag = "--trace" if args.trace else "--vcd"
@@ -392,8 +418,10 @@ def _run(args, out) -> int:
         for r in result.records:
             delta = ("" if r.size_after is None or r.size_before is None
                      else f", size {r.size_before} -> {r.size_after}")
+            pats = ("" if not r.pattern_stats else ", patterns: "
+                    + ir_text.format_pattern_stats(r.pattern_stats))
             print(f"// ===== after {r.name} ({r.level}, "
-                  f"{r.wall_ms:.3f} ms{delta}) =====", file=out)
+                  f"{r.wall_ms:.3f} ms{delta}{pats}) =====", file=out)
             print(r.dump_after, file=out)
         if args.emit:
             try:

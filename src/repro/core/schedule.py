@@ -7,18 +7,22 @@ pass.  Around it we provide the passes a reusable scheduling layer needs
 on TPU: loop splitting, interchange, grid-parallelisation (pallas grid),
 vectorisation, and memory-space placement.
 
-All passes are destructive on the Kernel (cheap dataclasses) and re-verify
-afterwards, mirroring MLIR's pass + verifier discipline.
+Every structural transform here is a :class:`~repro.core.rewrite.Pattern`
+applied by the shared :class:`~repro.core.rewrite.RewriteDriver` — the
+module no longer hand-rolls its own traversal/reconstruction.  The
+public pass functions keep their pre-refactor signatures, in-place
+semantics, and diagnostics; they construct the pattern, run the driver,
+and re-verify, mirroring MLIR's pass + verifier discipline.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
+from . import rewrite
 from .loop_ir import (AffineExpr, Buffer, EwiseTile, Kernel, Loop, LoopKind,
-                      LoopVar, MatmulTile, MemSpace, Stmt, TileRef, ZeroTile,
-                      _stmt_refs)
+                      LoopVar, MatmulTile, MemSpace, Stmt, TileRef, ZeroTile)
+from .rewrite import OneShotPattern, RewriteDriver, RewriteError
 
 
 # --------------------------------------------------------------------------
@@ -26,36 +30,107 @@ from .loop_ir import (AffineExpr, Buffer, EwiseTile, Kernel, Loop, LoopKind,
 # --------------------------------------------------------------------------
 
 
-def _parent_and_list(kernel: Kernel, var: str) -> Tuple[List[Stmt], int, Loop]:
-    """Locate the Loop with variable ``var`` and the list containing it."""
-
-    def go(stmts: List[Stmt]):
-        for idx, s in enumerate(stmts):
-            if isinstance(s, Loop):
-                if s.var.name == var:
-                    return stmts, idx, s
-                found = go(s.body)
-                if found:
-                    return found
-        return None
-
-    found = go(kernel.body)
-    if not found:
-        raise KeyError(f"loop {var!r} not found in kernel {kernel.name}")
-    return found
-
-
 def _rewrite_refs(stmts: List[Stmt], fn) -> None:
-    for s in stmts:
-        if isinstance(s, Loop):
-            _rewrite_refs(s.body, fn)
-        elif isinstance(s, ZeroTile):
-            s.dst = fn(s.dst)
-        elif isinstance(s, MatmulTile):
-            s.dst, s.lhs, s.rhs = fn(s.dst), fn(s.lhs), fn(s.rhs)
-        elif isinstance(s, EwiseTile):
-            s.dst = fn(s.dst)
-            s.srcs = [fn(r) for r in s.srcs]
+    rewrite._map_stmt_refs(stmts, fn)
+
+
+def _run_one_shot(kernel: Kernel, pat: OneShotPattern,
+                  missing: str) -> Kernel:
+    """Drive a one-shot pattern over ``kernel`` (in place); raise
+    ``KeyError(missing)`` if its target never matched."""
+    RewriteDriver([pat], max_iterations=2).run(kernel)
+    if not pat.applied:
+        raise KeyError(missing)
+    kernel.verify()
+    return kernel
+
+
+# --------------------------------------------------------------------------
+# patterns (the ported transforms)
+# --------------------------------------------------------------------------
+
+
+class SetLoopKind(OneShotPattern):
+    """Re-annotate the named loop with a new ``LoopKind``."""
+
+    name = "set-loop-kind"
+
+    def __init__(self, var: str, kind: LoopKind):
+        super().__init__()
+        self.var = var
+        self.kind = kind
+
+    def apply_once(self, parent, siblings, i, root):
+        loop = siblings[i]
+        if not isinstance(loop, Loop) or loop.var.name != self.var:
+            return None
+        loop.kind = self.kind
+        return (1, [loop])
+
+
+class SplitLoop(OneShotPattern):
+    """var(E) -> var_o(E/factor) x var_i(factor); rewrites affine indices."""
+
+    name = "split-loop"
+
+    def __init__(self, var: str, factor: int):
+        super().__init__()
+        self.var = var
+        self.factor = factor
+
+    def apply_once(self, parent, siblings, i, root):
+        loop = siblings[i]
+        if not isinstance(loop, Loop) or loop.var.name != self.var:
+            return None
+        E, var, factor = loop.var.extent, self.var, self.factor
+        if E % factor:
+            raise RewriteError(
+                f"split: {factor} does not divide extent {E} of {var}")
+        vo = LoopVar(var + "_o", E // factor)
+        vi = LoopVar(var + "_i", factor)
+
+        def rw(ref: TileRef) -> TileRef:
+            new_idx = []
+            for e in ref.index:
+                coeffs = []
+                for v, s in e.coeffs:
+                    if v == var:
+                        coeffs.append((vo.name, s * factor))
+                        coeffs.append((vi.name, s))
+                    else:
+                        coeffs.append((v, s))
+                new_idx.append(AffineExpr(tuple(coeffs), e.const))
+            return TileRef(ref.buffer, tuple(new_idx), ref.tile)
+
+        _rewrite_refs(loop.body, rw)
+        inner_loop = Loop(vi, loop.kind, loop.body)
+        loop.var = vo
+        loop.body = [inner_loop]
+        return (1, [loop])
+
+
+class InterchangeLoops(OneShotPattern):
+    """Swap two perfectly-nested loops (vars and kinds trade places)."""
+
+    name = "interchange-loops"
+
+    def __init__(self, outer: str, inner: str):
+        super().__init__()
+        self.outer = outer
+        self.inner = inner
+
+    def apply_once(self, parent, siblings, i, root):
+        lo = siblings[i]
+        if not isinstance(lo, Loop) or lo.var.name != self.outer:
+            return None
+        if not (len(lo.body) == 1 and isinstance(lo.body[0], Loop)
+                and lo.body[0].var.name == self.inner):
+            raise RewriteError(
+                f"{self.outer} and {self.inner} are not perfectly nested")
+        li = lo.body[0]
+        lo.var, li.var = li.var, lo.var
+        lo.kind, li.kind = li.kind, lo.kind
+        return (1, [lo])
 
 
 # --------------------------------------------------------------------------
@@ -63,27 +138,25 @@ def _rewrite_refs(stmts: List[Stmt], fn) -> None:
 # --------------------------------------------------------------------------
 
 
+def _not_found(kernel: Kernel, var: str) -> str:
+    return f"loop {var!r} not found in kernel {kernel.name}"
+
+
 def unroll(kernel: Kernel, var: str) -> Kernel:
     """Mark loop ``var`` UNROLLED: spatial replication of its datapath."""
-    _, _, loop = _parent_and_list(kernel, var)
-    loop.kind = LoopKind.UNROLLED
-    kernel.verify()
-    return kernel
+    return _run_one_shot(kernel, SetLoopKind(var, LoopKind.UNROLLED),
+                         _not_found(kernel, var))
 
 
 def vectorize(kernel: Kernel, var: str) -> Kernel:
-    _, _, loop = _parent_and_list(kernel, var)
-    loop.kind = LoopKind.VECTOR
-    kernel.verify()
-    return kernel
+    return _run_one_shot(kernel, SetLoopKind(var, LoopKind.VECTOR),
+                         _not_found(kernel, var))
 
 
 def parallelize(kernel: Kernel, var: str) -> Kernel:
     """Map loop ``var`` to the pallas grid (must be loop-carried-free)."""
-    _, _, loop = _parent_and_list(kernel, var)
-    loop.kind = LoopKind.GRID
-    kernel.verify()
-    return kernel
+    return _run_one_shot(kernel, SetLoopKind(var, LoopKind.GRID),
+                         _not_found(kernel, var))
 
 
 def flatten_inner(kernel: Kernel) -> Kernel:
@@ -97,52 +170,21 @@ def flatten_inner(kernel: Kernel) -> Kernel:
                 depth_of, deepest = depth, s
     if deepest is None:
         raise ValueError(f"kernel {kernel.name} has no innermost loop")
-    deepest.kind = LoopKind.UNROLLED
-    kernel.verify()
-    return kernel
+    return _run_one_shot(kernel,
+                         SetLoopKind(deepest.var.name, LoopKind.UNROLLED),
+                         _not_found(kernel, deepest.var.name))
 
 
 def interchange(kernel: Kernel, outer: str, inner: str) -> Kernel:
     """Swap two perfectly-nested loops."""
-    _, _, lo = _parent_and_list(kernel, outer)
-    if not (len(lo.body) == 1 and isinstance(lo.body[0], Loop)
-            and lo.body[0].var.name == inner):
-        raise ValueError(f"{outer} and {inner} are not perfectly nested")
-    li = lo.body[0]
-    lo.var, li.var = li.var, lo.var
-    lo.kind, li.kind = li.kind, lo.kind
-    kernel.verify()
-    return kernel
+    return _run_one_shot(kernel, InterchangeLoops(outer, inner),
+                         _not_found(kernel, outer))
 
 
 def split(kernel: Kernel, var: str, factor: int) -> Kernel:
     """var(E) -> var_o(E/factor) x var_i(factor); rewrites affine indices."""
-    _, _, loop = _parent_and_list(kernel, var)
-    E = loop.var.extent
-    if E % factor:
-        raise ValueError(f"split: {factor} does not divide extent {E} of {var}")
-    vo = LoopVar(var + "_o", E // factor)
-    vi = LoopVar(var + "_i", factor)
-
-    def rw(ref: TileRef) -> TileRef:
-        new_idx = []
-        for e in ref.index:
-            coeffs = []
-            for v, s in e.coeffs:
-                if v == var:
-                    coeffs.append((vo.name, s * factor))
-                    coeffs.append((vi.name, s))
-                else:
-                    coeffs.append((v, s))
-            new_idx.append(AffineExpr(tuple(coeffs), e.const))
-        return TileRef(ref.buffer, tuple(new_idx), ref.tile)
-
-    _rewrite_refs(loop.body, rw)
-    inner_loop = Loop(vi, loop.kind, loop.body)
-    loop.var = vo
-    loop.body = [inner_loop]
-    kernel.verify()
-    return kernel
+    return _run_one_shot(kernel, SplitLoop(var, factor),
+                         _not_found(kernel, var))
 
 
 def set_space(kernel: Kernel, buffer_name: str, space: MemSpace) -> Kernel:
@@ -163,62 +205,70 @@ def set_space(kernel: Kernel, buffer_name: str, space: MemSpace) -> Kernel:
     raise KeyError(f"scratch buffer {buffer_name!r} not found")
 
 
+class FuseEpiloguePattern(rewrite.Pattern):
+    """Fuse an adjacent elementwise nest that consumes a matmul's output
+    tile-for-tile into the producer nest (removes an HBM round-trip)."""
+
+    name = "fuse-epilogue"
+
+    def match_and_rewrite(self, parent, siblings, i, root):
+        # only top-level nests fuse (the canonical matmul -> ewise chain
+        # produced by lowering.py sits directly in the kernel body)
+        if not isinstance(parent, Kernel) or i + 1 >= len(siblings):
+            return None
+        a, b = siblings[i], siblings[i + 1]
+        if not (isinstance(a, Loop) and isinstance(b, Loop)):
+            return None
+        prods = _stored_hbm_buffers(a)
+        if not prods:
+            return None
+        cons_srcs = _loopnest_leaf(b)
+        if cons_srcs is None:
+            return None
+        leaf_stmts, b_vars = cons_srcs
+        if len(leaf_stmts) != 1 or not isinstance(leaf_stmts[0], EwiseTile):
+            return None
+        ew = leaf_stmts[0]
+        hits = [p for p in prods if any(r.buffer.name == p for r in ew.srcs)]
+        if not hits:
+            return None
+        prod = hits[0]
+        a_vars = _nest_vars(a)
+        if len(a_vars) < len(b_vars):
+            return None
+        # the consumer must walk the *same tile grid* as the producer's
+        # outer loops: equal extents, and its refs use matching tiles.
+        if any(av.extent != bv.extent for av, bv in zip(a_vars, b_vars)):
+            return None
+        prod_tile = _store_tile(a, prod)
+        if prod_tile is not None and ew.dst.tile[-len(prod_tile):] != prod_tile:
+            return None
+        # substitute the consumer's loop vars by the producer's outer vars
+        mapping = dict(zip([v.name for v in b_vars],
+                           [v.name for v in a_vars]))
+
+        def rw(ref: TileRef) -> TileRef:
+            idx = tuple(AffineExpr(tuple((mapping.get(v, v), s)
+                                         for v, s in e.coeffs), e.const)
+                        for e in ref.index)
+            return TileRef(ref.buffer, idx, ref.tile)
+
+        new_leaf = EwiseTile(ew.op, rw(ew.dst), [rw(r) for r in ew.srcs])
+        _append_to_innermost(a, new_leaf, depth=len(b_vars))
+        return (2, [a])
+
+
 def fuse_epilogue(kernel: Kernel) -> Kernel:
     """Fuse a following elementwise loop nest that consumes a matmul's
     output tile-for-tile into the matmul nest (removes an HBM round-trip).
 
     Handles the canonical ``matmul -> ewise(C, ...)`` chain produced by
-    ``lowering.py`` when both nests walk the same tile grid.  This is the
-    TPU equivalent of keeping the epilogue on the accelerator fabric
-    instead of bouncing through the AXI bus.
+    ``lowering.py`` when both nests walk the same tile grid — chained
+    epilogues (bias_add then relu) fuse one per driver sweep until the
+    fixpoint.  This is the TPU equivalent of keeping the epilogue on the
+    accelerator fabric instead of bouncing through the AXI bus.
     """
-    body = kernel.body
-    fused = True
-    while fused:
-        fused = False
-        for i in range(len(body) - 1):
-            a, b = body[i], body[i + 1]
-            if not (isinstance(a, Loop) and isinstance(b, Loop)):
-                continue
-            prods = _stored_hbm_buffers(a)
-            if not prods:
-                continue
-            cons_srcs = _loopnest_leaf(b)
-            if cons_srcs is None:
-                continue
-            leaf_stmts, b_vars = cons_srcs
-            if len(leaf_stmts) != 1 or not isinstance(leaf_stmts[0], EwiseTile):
-                continue
-            ew = leaf_stmts[0]
-            hits = [p for p in prods if any(r.buffer.name == p for r in ew.srcs)]
-            if not hits:
-                continue
-            prod = hits[0]
-            a_vars = _nest_vars(a)
-            if len(a_vars) < len(b_vars):
-                continue
-            # the consumer must walk the *same tile grid* as the producer's
-            # outer loops: equal extents, and its refs use matching tiles.
-            if any(av.extent != bv.extent
-                   for av, bv in zip(a_vars, b_vars)):
-                continue
-            prod_tile = _store_tile(a, prod)
-            if prod_tile is not None and ew.dst.tile[-len(prod_tile):] != prod_tile:
-                continue
-            # substitute the consumer's loop vars by the producer's outer vars
-            mapping = dict(zip([v.name for v in b_vars], [v.name for v in a_vars]))
-
-            def rw(ref: TileRef) -> TileRef:
-                idx = tuple(AffineExpr(tuple((mapping.get(v, v), s)
-                                             for v, s in e.coeffs), e.const)
-                            for e in ref.index)
-                return TileRef(ref.buffer, idx, ref.tile)
-
-            new_leaf = EwiseTile(ew.op, rw(ew.dst), [rw(r) for r in ew.srcs])
-            _append_to_innermost(a, new_leaf, depth=len(b_vars))
-            del body[i + 1]
-            fused = True
-            break
+    RewriteDriver([FuseEpiloguePattern()]).run(kernel)
     kernel.verify()
     return kernel
 

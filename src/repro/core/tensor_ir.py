@@ -192,6 +192,21 @@ class Op:
         from . import ir_text
         return ir_text.print_op(self)
 
+    # ---- rewrite-core structural protocol (see core/rewrite.py) -----------
+
+    def children(self) -> List["Op"]:
+        return []
+
+    def rebuild(self, children: Sequence["Op"]) -> "Op":
+        assert not children
+        return Op(self.opname, list(self.inputs), dict(self.attrs),
+                  self.result)
+
+    def is_equivalent(self, other) -> bool:
+        from . import ir_text
+        return isinstance(other, Op) and \
+            ir_text.print_op(self) == ir_text.print_op(other)
+
 
 class Graph:
     """A TensorIR function: ordered SSA ops over named inputs."""
@@ -227,6 +242,26 @@ class Graph:
 
     def set_outputs(self, *values: Value):
         self.outputs = list(values)
+
+    # ---- rewrite-core structural protocol (see core/rewrite.py) -----------
+
+    def children(self) -> List[Op]:
+        """The graph's mutable op list (the rewrite driver splices it)."""
+        return self.ops
+
+    def rebuild(self, children: Sequence[Op]) -> "Graph":
+        g = Graph(self.name)
+        g.inputs = list(self.inputs)
+        g.ops = list(children)
+        g.outputs = list(self.outputs)
+        g._counter = self._counter
+        return g
+
+    def is_equivalent(self, other) -> bool:
+        """Structural equivalence: identical canonical textual form."""
+        from . import ir_text
+        return isinstance(other, Graph) and \
+            ir_text.print_graph(self) == ir_text.print_graph(other)
 
     # ---- verification ------------------------------------------------------
 

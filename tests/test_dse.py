@@ -45,6 +45,37 @@ def test_space_contains_paper_points_and_knobs():
             PassManager.parse(p.hw_pipeline)
 
 
+def test_canonical_dedupe_shrinks_and_logs():
+    """grid{vars=2} vs grid{vars=3} at full-dim tiles are the same design
+    (the extra grid loop has extent 1): the canonical-form dedupe drops
+    one, records the (eliminated, kept) pair, and the table names it."""
+    g = _gemm(8)
+    points = enumerate_points(g)
+    kept, dropped = dse.dedupe_points(g, points)
+    assert len(kept) + len(dropped) == len(points)
+    assert dropped, "full-dim kgrid point should dedupe against tpu_mxu"
+    fams = {(gone.family, k.family) for gone, k in dropped}
+    assert ("tpu_mxu_kgrid", "tpu_mxu") in fams
+    res = explore(g)
+    assert [p.spec for p, _ in res.deduped] == \
+        [p.spec for p, _ in dropped]
+    assert len(res.candidates) == len(kept)
+    table = res.table()
+    assert f"canonical-form dedupe eliminated {len(dropped)}" in table
+    for gone, k in dropped:
+        assert gone.spec in table and k.spec in table
+
+
+def test_canonical_key_tolerates_failing_points():
+    """A point whose pipeline fails must be kept (so explore records the
+    real error), not silently deduped away."""
+    g = _gemm(8)
+    bogus = DsePoint("broken", "lower,split{var=nope,factor=2}")
+    assert dse.canonical_key(g, bogus) is None
+    kept, dropped = dse.dedupe_points(g, [bogus, bogus])
+    assert kept == [bogus, bogus] and not dropped
+
+
 def test_vectorize_legality_guards_reductions():
     """GEMM's K loop accumulates into a K-invariant tile: not SIMD-legal
     (and neither are i/j, which share the accumulator); the epilogue's
@@ -156,6 +187,23 @@ def test_cache_hits_on_second_run(tmp_path):
             (o.cycles, o.resources, o.area, o.feasible)
 
 
+def test_warm_cache_compiles_nothing(tmp_path, monkeypatch):
+    """The canonical dedupe key rides in the on-disk cache (deduped
+    points store a key-only entry), so a warm explore never rebuilds a
+    single point — dedupe included."""
+    cdir = str(tmp_path / "cache")
+    explore(_gemm(8), cache_dir=cdir)
+    calls = []
+    orig = dse.build_point
+    monkeypatch.setattr(dse, "build_point",
+                        lambda *a, **k: (calls.append(a[1].spec),
+                                         orig(*a, **k))[1])
+    r = explore(_gemm(8), cache_dir=cdir)
+    assert calls == [], "warm explore must not recompile any point"
+    assert r.deduped, "dedupe must still be reported from the cache"
+    assert all(c.cached for c in r.candidates)
+
+
 def test_cache_keyed_by_machine_and_graph(tmp_path):
     cdir = str(tmp_path / "cache")
     explore(_gemm(8), cache_dir=cdir)
@@ -171,12 +219,14 @@ def test_cache_keyed_by_machine_and_graph(tmp_path):
 def test_cache_survives_corruption(tmp_path):
     cdir = str(tmp_path / "cache")
     explore(_gemm(8), cache_dir=cdir)
-    for fn in os.listdir(cdir):
+    # alternate syntactic corruption with valid-JSON-wrong-shape entries
+    for j, fn in enumerate(sorted(os.listdir(cdir))):
         with open(os.path.join(cdir, fn), "w") as f:
-            f.write("{not json")
+            f.write("{not json" if j % 2 else "[1, 2]")
     r = explore(_gemm(8), cache_dir=cdir)
     assert not any(c.cached for c in r.candidates)
-    assert len(r.candidates) == len(enumerate_points(_gemm(8)))
+    kept, _ = dse.dedupe_points(_gemm(8), enumerate_points(_gemm(8)))
+    assert len(r.candidates) == len(kept)
 
 
 # --------------------------------------------------------------------------
@@ -254,7 +304,10 @@ def test_reproc_dse_cli(tmp_path):
     assert "Pareto frontier" in text and "cosim" in text
     rows = csv.read_text().strip().splitlines()
     assert rows[0].startswith("family,spec,cycles")
-    assert len(rows) == 1 + len(enumerate_points(_gemm(8)))
+    kept, dropped = dse.dedupe_points(_gemm(8), enumerate_points(_gemm(8)))
+    assert len(rows) == 1 + len(kept)
+    # the shrinkage is logged, never silent
+    assert f"canonical-form dedupe eliminated {len(dropped)}" in text
     # flag validation
     assert reproc.main(["--pareto-csv", "x.csv"], out=io.StringIO()) == 2
     assert reproc.main(["--dse", "--pipeline", "lower"],

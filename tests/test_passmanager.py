@@ -87,6 +87,50 @@ def test_unknown_pass_raises_keyerror():
         PassManager().add("nonexistent-pass")
 
 
+def test_unknown_pass_did_you_mean():
+    with pytest.raises(KeyError, match="did you mean 'flatten-inner'"):
+        PassManager().add("flatten-iner")
+    with pytest.raises(KeyError, match="did you mean 'canonicalize'"):
+        PassManager().add("canonicalise")
+
+
+# ---- pipeline-spec hardening ------------------------------------------------
+
+
+@pytest.mark.parametrize("spec,fragment", [
+    ("lower{tile_m=4", "unclosed '{' at offset 5"),
+    ("lower{tile_m={4}}", "nested '{' at offset 13"),
+    ("lower}ugh", "unbalanced '}' at offset 5"),
+    ("lower,,flatten", "empty pipeline stage before ',' at offset 6"),
+    (",lower", "empty pipeline stage before ',' at offset 0"),
+    ("lower;;flatten", "empty pipeline stage before ';' at offset 6"),
+    ("lower{}", "empty argument braces on 'lower' at offset 0"),
+    ("lower{tile_m=}", "bad pass argument 'tile_m='"),
+    ("lower{=4}", "bad pass argument '=4'"),
+    ("lower{tile_m 4}", "bad pass argument 'tile_m 4'"),
+    ("low er", "bad pipeline stage 'low er' at offset 0"),
+])
+def test_pipeline_parse_errors_name_offset(spec, fragment):
+    from repro.core.passes import PipelineParseError
+    with pytest.raises(PipelineParseError) as ei:
+        parse_pipeline(spec)
+    assert fragment in str(ei.value)
+    assert repr(spec) in str(ei.value)      # the offending spec is echoed
+
+
+def test_pipeline_parse_errors_reach_cli_as_diagnostics(capsys):
+    rc, _ = _run_cli(["--pipeline", "lower{tile_m=4"])
+    assert rc == 1
+    assert "unclosed '{'" in capsys.readouterr().err
+
+
+def test_pipeline_parser_still_accepts_benign_edges():
+    assert parse_pipeline("") == []
+    assert parse_pipeline("lower,") == [{"name": "lower", "kwargs": {}}]
+    stages = parse_pipeline(" lower { tile_m = 4 } ; flatten ".replace(" ", ""))
+    assert [s["name"] for s in stages] == ["lower", "flatten"]
+
+
 # ---- level checking --------------------------------------------------------
 
 
@@ -282,11 +326,38 @@ def test_cli_unknown_pass_exits_nonzero_with_diagnostic(capsys):
 
 
 def test_cli_unknown_emit_level_exits_nonzero(capsys):
-    # argparse rejects bad --emit choices up front (exit code 2)
-    with pytest.raises(SystemExit) as ei:
-        reproc.main(["--emit", "netlist"])
-    assert ei.value.code == 2
+    # bad --emit levels are a diagnostic (exit code 2), not a traceback
+    assert reproc.main(["--emit", "netlist"], out=io.StringIO()) == 2
     assert "invalid choice" in capsys.readouterr().err
+
+
+def test_cli_unknown_emit_level_suggests(capsys):
+    """A close misspelling earns a did-you-mean hint."""
+    assert reproc.main(["--emit", "verilogg"], out=io.StringIO()) == 2
+    err = capsys.readouterr().err
+    assert "did you mean 'verilog'?" in err
+
+
+def test_cli_unknown_pass_suggests(capsys):
+    """Unknown pass diagnostics suggest the closest registered name."""
+    rc, _ = _run_cli(["--pipeline", "lower,flaten-inner"])
+    assert rc == 1
+    err = capsys.readouterr().err
+    assert "did you mean 'flatten-inner'?" in err
+
+
+def test_cli_list_passes_shows_level_and_pattern_count():
+    rc, out = _run_cli(["--list-passes"])
+    assert rc == 0
+    lines = {ln.split()[0]: ln for ln in out.splitlines()[1:] if ln.strip()}
+    # canonicalize is level-agnostic and pattern-built
+    assert "tensor/loop/hw" in lines["canonicalize"]
+    ncanon = len(PASS_REGISTRY["canonicalize"].pattern_names)
+    assert ncanon >= 6 and f" {ncanon} " in lines["canonicalize"]
+    # ported schedule passes name their pattern count too
+    assert " 1 " in lines["split"]
+    # non-pattern passes show '-'
+    assert " - " in lines["lower"]
 
 
 def test_cli_output_file_for_emit(tmp_path):

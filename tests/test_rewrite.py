@@ -1,0 +1,502 @@
+"""Unified pattern-rewrite core (PR 5 tentpole): structural protocol,
+greedy driver, canonicalize at all three levels (idempotence + cosim
+equivalence), pattern-ported schedule transforms, and the stats wiring
+through PassRecord / docs."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import backend_ref, hw_ir, hw_sim, ir_text, machine_model, \
+    rewrite, schedule
+from repro.core.frontend import spec, trace
+from repro.core.loop_ir import Kernel, Loop
+from repro.core.passes import PASS_REGISTRY, PassManager
+from repro.core.pipeline import SCHEDULES, compile_gemm
+from repro.core.reproc import quickstart_gemm
+from repro.core.rewrite import (CANONICAL_PATTERNS, Pattern, RewriteDriver,
+                                RewriteError, canonicalize, collect_stats,
+                                normalize_affine)
+from repro.core.tensor_ir import Graph, TensorType
+import repro.core.frontend as fe
+
+DOCS = os.path.join(os.path.dirname(__file__), "..", "docs")
+
+
+def _gemm(s=8, epilogue="bias_relu"):
+    return quickstart_gemm(s, s, s, epilogue=epilogue)
+
+
+def _lowered(s=8, tile=4, epilogue="bias_relu"):
+    return PassManager.parse(
+        f"lower{{tile_m={tile},tile_n={tile},tile_k={tile}}}"
+    ).run(_gemm(s, epilogue)).artifact
+
+
+# --------------------------------------------------------------------------
+# the structural protocol
+# --------------------------------------------------------------------------
+
+
+def test_protocol_children_are_the_mutable_lists():
+    g = _gemm()
+    assert g.children() is g.ops
+    k = _lowered()
+    assert k.children() is k.body
+    loop = k.body[0]
+    assert loop.children() is loop.body
+    assert k.body[0].body[0].body[0].children() == []      # leaf stmt
+    mod = hw_ir.lower_to_hw(k)
+    assert mod.children() is mod.ctrl
+    hw_loop = mod.ctrl[0]
+    assert hw_loop.children() is hw_loop.body
+    steps = mod.steps()
+    assert steps[0].children() == []
+
+
+def test_protocol_rebuild_round_trips_each_level():
+    g = _gemm()
+    g2 = g.rebuild(list(g.children()))
+    assert ir_text.print_ir(g2) == ir_text.print_ir(g)
+    k = _lowered()
+    k2 = k.rebuild(list(k.children()))
+    assert ir_text.print_ir(k2) == ir_text.print_ir(k)
+    loop = k.body[0]
+    assert ir_text.print_stmt(loop.rebuild(list(loop.body))) == \
+        ir_text.print_stmt(loop)
+    mod = hw_ir.lower_to_hw(k)
+    m2 = mod.rebuild(list(mod.children()))
+    assert ir_text.print_ir(m2) == ir_text.print_ir(mod)
+
+
+def test_protocol_is_equivalent_is_structural():
+    k1, k2 = _lowered(), _lowered()
+    assert k1.is_equivalent(k2) and k1 is not k2
+    schedule.flatten_inner(k2)
+    assert not k1.is_equivalent(k2)
+    g1, g2 = _gemm(), _gemm(4)
+    assert g1.is_equivalent(_gemm()) and not g1.is_equivalent(g2)
+    m1 = hw_ir.lower_to_hw(_lowered())
+    m2 = hw_ir.lower_to_hw(_lowered())
+    assert m1.is_equivalent(m2)
+    hw_ir.set_sequencer(m2, m2.loops()[0].counter, "stream")
+    assert not m1.is_equivalent(m2)
+
+
+# --------------------------------------------------------------------------
+# the driver
+# --------------------------------------------------------------------------
+
+
+class _RetagFirstLoop(Pattern):
+    """test-only: rename the first loop it sees (once per loop)."""
+
+    name = "retag"
+
+    def match_and_rewrite(self, parent, siblings, i, root):
+        from repro.core.loop_ir import LoopVar
+        s = siblings[i]
+        if not isinstance(s, Loop) or s.var.name.startswith("rt_"):
+            return None
+        new_name = "rt_" + s.var.name
+
+        def rn(ref):
+            from repro.core.loop_ir import AffineExpr, TileRef
+            idx = tuple(AffineExpr(tuple(
+                (new_name if v == s.var.name else v, c)
+                for v, c in e.coeffs), e.const) for e in ref.index)
+            return TileRef(ref.buffer, idx, ref.tile)
+
+        rewrite._map_stmt_refs(s.body, rn)
+        s.var = LoopVar(new_name, s.var.extent)
+        return (1, [s])
+
+
+def test_driver_reaches_fixpoint_and_counts_hits():
+    k = _lowered()
+    n_loops = len(k.loops())
+    stats = RewriteDriver([_RetagFirstLoop()]).run(k)
+    assert stats.converged
+    assert stats.hits == {"retag": n_loops}
+    assert all(l.var.name.startswith("rt_") for l in k.loops())
+    k.verify()
+    # second run: already in target form, no hits, one clean sweep
+    stats2 = RewriteDriver([_RetagFirstLoop()]).run(k)
+    assert stats2.converged and stats2.total == 0
+
+
+def test_driver_iteration_cap_reports_non_convergence():
+    class Flip(Pattern):
+        name = "flip"
+
+        def match_and_rewrite(self, parent, siblings, i, root):
+            s = siblings[i]
+            if not isinstance(s, Loop):
+                return None
+            return (1, [s])          # claims a rewrite forever
+
+    stats = RewriteDriver([Flip()], max_iterations=3).run(_lowered())
+    assert not stats.converged and stats.iterations == 3
+    # canonicalize surfaces a missed fixpoint as a hard error: one sweep
+    # can never confirm convergence on a kernel that needed rewrites
+    with pytest.raises(RewriteError, match="no fixpoint"):
+        canonicalize(_lowered(8, 8), max_iterations=1)
+
+
+def test_driver_benefit_orders_patterns():
+    fired = []
+
+    class Lo(Pattern):
+        name = "lo"
+        benefit = 1
+
+        def match_and_rewrite(self, parent, siblings, i, root):
+            fired.append("lo")
+            return None
+
+    class Hi(Pattern):
+        name = "hi"
+        benefit = 9
+
+        def match_and_rewrite(self, parent, siblings, i, root):
+            fired.append("hi")
+            return None
+
+    RewriteDriver([Lo(), Hi()]).run(_lowered())
+    assert fired and fired[0] == "hi"
+    assert fired.index("hi") < fired.index("lo")
+
+
+def test_collect_stats_scopes_nest_and_merge():
+    k = _lowered(8, 8)
+    with collect_stats() as outer:
+        with collect_stats() as inner:
+            canonicalize(k)
+        assert inner.get("drop-unit-loop", 0) >= 3
+    assert outer == inner            # both scopes saw the same driver
+
+
+# --------------------------------------------------------------------------
+# canonicalize: TensorIR
+# --------------------------------------------------------------------------
+
+
+def test_canonicalize_tensor_dead_ops_and_identities():
+    g = Graph("junk")
+    a = g.add_input("a", TensorType((4, 4)))
+    dead = g.emit("exp", [a])                       # never used
+    t = g.emit("transpose", [a], perm=[0, 1])       # identity perm
+    c = g.emit("cast", [t], dtype="float32")        # identity cast
+    r1 = g.emit("relu", [c])
+    r2 = g.emit("relu", [r1])                       # relu∘relu
+    g.set_outputs(r2)
+    g.verify()
+    x = np.random.default_rng(0).standard_normal((4, 4)).astype(np.float32)
+    (want,) = g.eval_np(x)
+
+    with collect_stats() as hits:
+        canonicalize(g)
+    g.verify()
+    assert hits["dead-op-elim"] >= 1
+    assert hits["fold-identity-transpose"] == 1
+    assert hits["fold-identity-cast"] == 1
+    assert hits["fold-idempotent-ewise"] == 1
+    assert [op.opname for op in g.ops] == ["relu"]  # all folded to one
+    (got,) = g.eval_np(x)
+    np.testing.assert_array_equal(got, want)
+    # idempotent
+    t1 = ir_text.print_ir(g)
+    canonicalize(g)
+    assert ir_text.print_ir(g) == t1
+
+
+def test_canonicalize_tensor_keeps_live_nonidentity_ops():
+    g = _gemm()
+    before = ir_text.print_ir(g)
+    canonicalize(g)
+    assert ir_text.print_ir(g) == before
+
+
+# --------------------------------------------------------------------------
+# canonicalize: LoopIR
+# --------------------------------------------------------------------------
+
+
+def test_canonicalize_loop_drops_unit_loops_preserving_semantics():
+    k = _lowered(8, 8)               # full-dim tiles -> all extents 1
+    rng = np.random.default_rng(1)
+    a, b, c = (rng.standard_normal(s).astype(np.float32)
+               for s in ((8, 8), (8, 8), (8,)))
+    want = backend_ref.run(k, [a, b, c])[-1]
+    with collect_stats() as hits:
+        canonicalize(k)
+    k.verify()
+    assert hits["drop-unit-loop"] >= 3
+    assert not k.loops(), "every extent-1 loop must be inlined"
+    got = backend_ref.run(k, [a, b, c])[-1]
+    np.testing.assert_array_equal(got, want)
+
+
+def test_canonicalize_loop_merges_independent_seq_nests():
+    text = """\
+stagecc.kernel @two(a: tensor<8x8xfloat32> @hbm, b: tensor<8x8xfloat32> @hbm, c: tensor<8x8xfloat32> @hbm, d: tensor<8x8xfloat32> @hbm) -> (c, d) {
+  for %i in [0,2) @seq {
+    c[i, 0 : 4x8] = vpu.relu(a[i, 0 : 4x8])
+  }
+  for %j in [0,2) @seq {
+    d[j, 0 : 4x8] = vpu.neg(b[j, 0 : 4x8])
+  }
+}
+"""
+    k = ir_text.parse_kernel(text)
+    rng = np.random.default_rng(2)
+    a, b = (rng.standard_normal((8, 8)).astype(np.float32) for _ in range(2))
+    want = backend_ref.run(k, [a, b])
+    with collect_stats() as hits:
+        canonicalize(k)
+    k.verify()
+    assert hits["merge-seq-loops"] == 1
+    assert len(k.body) == 1 and len(k.body[0].body) == 2
+    got = backend_ref.run(k, [a, b])
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
+
+
+def test_canonicalize_loop_refuses_dependent_nests():
+    """The lowered bias_relu chain is producer/consumer at every seam:
+    merge-seq-loops must not fire (that is fuse-epilogue's, tile-grid-
+    checked, job)."""
+    k = _lowered(8, 4)
+    assert len(k.body) == 3
+    with collect_stats() as hits:
+        canonicalize(k)
+    assert hits.get("merge-seq-loops", 0) == 0
+    assert len(k.body) == 3
+
+
+def test_canonicalize_loop_normalizes_tile_refs():
+    text = """\
+stagecc.kernel @n(a: tensor<8x8xfloat32> @hbm, c: tensor<8x8xfloat32> @hbm) -> (c) {
+  for %i in [0,2) @seq {
+    c[0*i+i, 0 : 4x8] = vpu.relu(a[i+0*i, 0 : 4x8])
+  }
+}
+"""
+    k = ir_text.parse_kernel(text)
+    with collect_stats() as hits:
+        canonicalize(k)
+    assert hits["normalize-tileref"] == 1
+    assert "c[i, 0 : 4x8] = vpu.relu(a[i, 0 : 4x8])" in ir_text.print_ir(k)
+
+
+def test_normalize_affine_unit():
+    from repro.core.loop_ir import AffineExpr
+    e = AffineExpr((("j", 1), ("i", 2), ("j", -1), ("i", 1)), 3)
+    n = normalize_affine(e)
+    assert n.coeffs == (("i", 3),) and n.const == 3
+    env = {"i": 5, "j": 7}
+    assert n.evaluate(env) == e.evaluate(env)
+
+
+# --------------------------------------------------------------------------
+# canonicalize: HwIR
+# --------------------------------------------------------------------------
+
+
+def test_canonicalize_hw_collapses_trip1_and_dedupes_units():
+    k = _lowered(8, 8)               # unit extents everywhere
+    mod = hw_ir.lower_to_hw(k)
+    n_units = len(mod.units)
+    inputs = hw_sim.random_inputs(mod, seed=0)
+    want = hw_sim.simulate(mod, inputs)
+    with collect_stats() as hits:
+        canonicalize(mod)
+    mod.verify()
+    assert hits["collapse-trip1-sequencer"] >= 3
+    assert hits["dedupe-units"] >= 1
+    assert not mod.loops() and len(mod.units) < n_units
+    got = hw_sim.simulate(mod, inputs)
+    for name in want.out_ports:
+        np.testing.assert_array_equal(got.storage[name],
+                                      want.storage[name])
+    # fewer FSM states, never more
+    assert got.cycles.total <= want.cycles.total
+    # model and sim stay consistent on the canonical module
+    modeled = machine_model.cycles(mod).total
+    assert abs(got.cycles.total - modeled) <= max(1, 0.1 * modeled)
+
+
+def test_canonicalize_hw_normalizes_address_generators():
+    k = _lowered(8, 4)
+    mod = hw_ir.lower_to_hw(k)
+    # denormalize one operand's address generator by hand
+    step = mod.steps()[1]
+    o = step.operands[1]
+    from repro.core.loop_ir import AffineExpr
+    dirty = tuple(AffineExpr(e.coeffs + tuple((v, 0) for v, _ in e.coeffs),
+                             e.const) for e in o.index)
+    object.__setattr__(o, "index", dirty)
+    with collect_stats() as hits:
+        canonicalize(mod)
+    assert hits["normalize-addr-gen"] == 1
+    mod.verify()
+    t1 = ir_text.print_ir(mod)
+    canonicalize(mod)
+    assert ir_text.print_ir(mod) == t1
+
+
+# --------------------------------------------------------------------------
+# acceptance: canonicalize across every schedule x size, cosim-checked
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sched", SCHEDULES)
+@pytest.mark.parametrize("size", [4, 8, 16])
+def test_canonicalize_idempotent_and_cosim_equivalent(sched, size):
+    """PR-5 acceptance: with canonicalize wired between lowerings the
+    compiled kernel still co-simulates within 1e-5 of the numpy oracle,
+    and one canonicalize run is a fixpoint at every level."""
+    ck = compile_gemm(size, size, size, schedule=sched,
+                      epilogue="bias_relu", want_jax=False,
+                      want_pallas=False, canonicalize=True)
+    assert any(r.name == "canonicalize" for r in ck.pass_records)
+    rng = np.random.default_rng(size)
+    a = rng.standard_normal((size, size)).astype(np.float32)
+    b = rng.standard_normal((size, size)).astype(np.float32)
+    bias = rng.standard_normal((size,)).astype(np.float32)
+    rep = ck.simulate(a, b, bias, atol=1e-5)
+    (want,) = ck.graph.eval_np(a, b, bias)
+    got = rep.outputs[-1] if isinstance(rep.outputs, list) else rep.outputs
+    np.testing.assert_allclose(got, want, atol=1e-5)
+    # idempotence at every level: a second canonicalize changes nothing
+    for art in (ck.graph, ck.kernel, ck.hw_module):
+        t1 = ir_text.print_ir(art)
+        canonicalize(ir_text.parse_ir(t1))
+        assert ir_text.print_ir(canonicalize(ir_text.parse_ir(t1))) == t1
+
+
+# --------------------------------------------------------------------------
+# pattern-ported schedule transforms: round-trip-stable text
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("transform", ["split", "interchange", "fuse"])
+def test_ported_transforms_round_trip_stable(transform):
+    k = _lowered(8, 2)
+    if transform == "split":
+        schedule.split(k, k.loops()[0].var.name, 2)
+    elif transform == "interchange":
+        loops = k.loops()
+        schedule.interchange(k, loops[0].var.name, loops[1].var.name)
+    else:
+        schedule.fuse_epilogue(k)
+    t1 = ir_text.print_ir(k)
+    t2 = ir_text.print_ir(ir_text.parse_ir(t1))
+    assert t1 == t2, f"{transform} output must round-trip stably"
+
+
+def test_ported_transforms_report_pattern_hits():
+    r = PassManager.parse(
+        "lower{tile_m=4,tile_n=4,tile_k=4},fuse-epilogue,"
+        "split{var=i1,factor=2},interchange{outer=i1_o,inner=i1_i},"
+        "unroll{var=i1_i}").run(_gemm(8))
+    by_name = {rec.name: rec for rec in r.records}
+    assert by_name["fuse-epilogue"].pattern_stats == {"fuse-epilogue": 2}
+    assert by_name["split"].pattern_stats == {"split-loop": 1}
+    assert by_name["interchange"].pattern_stats == \
+        {"interchange-loops": 1}
+    assert by_name["unroll"].pattern_stats == {"set-loop-kind": 1}
+    assert "patterns:" in by_name["split"].summary()
+
+
+def test_set_sequencer_is_pattern_ported():
+    mod = hw_ir.lower_to_hw(_lowered(8, 4))
+    r = PassManager.parse(
+        f"set-sequencer{{counter={mod.loops()[0].counter},kind=stream}}"
+    ).run(mod)
+    assert r.records[0].pattern_stats == {"set-sequencer": 1}
+
+
+# --------------------------------------------------------------------------
+# registration / wiring
+# --------------------------------------------------------------------------
+
+
+def test_canonicalize_registered_at_all_three_levels():
+    pd = PASS_REGISTRY["canonicalize"]
+    assert pd.levels == ("tensor", "loop", "hw")
+    assert len(pd.pattern_names) == sum(len(v) for v in
+                                        CANONICAL_PATTERNS.values())
+    # and it actually runs at each level through the PassManager
+    r1 = PassManager.parse("canonicalize").run(_gemm())
+    assert r1.records[0].level == "tensor"
+    r2 = PassManager.parse("lower,canonicalize").run(_gemm())
+    assert r2.records[-1].level == "loop"
+    r3 = PassManager.parse("lower,lower-to-hw,canonicalize").run(_gemm())
+    assert r3.records[-1].level == "hw"
+
+
+def test_canonicalize_rejects_backend_artifact():
+    from repro.core.passes import PassError
+    with pytest.raises(PassError, match="tensor/loop/hw-level pass"):
+        PassManager.parse("lower,emit-ref,canonicalize").run(_gemm())
+
+
+def test_register_canonical_pattern_extends_a_level():
+    class Nop(Pattern):
+        name = "thirdparty-nop"
+
+        def match_and_rewrite(self, parent, siblings, i, root):
+            return None
+
+    if not any(p.name == "thirdparty-nop"
+               for p in CANONICAL_PATTERNS["loop"]):
+        rewrite.register_canonical_pattern("loop")(Nop)
+    assert any(p.name == "thirdparty-nop"
+               for p in CANONICAL_PATTERNS["loop"])
+    canonicalize(_lowered())         # still converges with the extra rule
+    # late registrations show up in the pass metadata (it resolves live,
+    # not from an import-time snapshot)
+    assert "loop:thirdparty-nop" in \
+        PASS_REGISTRY["canonicalize"].pattern_names
+    CANONICAL_PATTERNS["loop"] = [
+        p for p in CANONICAL_PATTERNS["loop"]
+        if p.name != "thirdparty-nop"]
+    with pytest.raises(ValueError, match="no canonicalization set"):
+        rewrite.register_canonical_pattern("backend")
+
+
+def test_canonicalize_keeps_grid_loops_for_pallas():
+    """Annotation-bearing loop kinds survive canonicalization: the
+    @grid nest IS the pallas mapping, so compile(canonicalize=True)
+    must not silently lose the pallas backend (found in review)."""
+    ck = compile_gemm(8, 8, 8, schedule="tpu_mxu", epilogue="bias_relu",
+                      want_jax=False, want_pallas=True, canonicalize=True)
+    from repro.core.loop_ir import LoopKind
+    kinds = {l.kind for l in ck.kernel.loops()}
+    assert LoopKind.GRID in kinds
+    assert ck.run_pallas is not None, \
+        "canonicalize must not cost tpu_mxu its pallas emission"
+    rng = np.random.default_rng(7)
+    a, b, bias = (rng.standard_normal(s).astype(np.float32)
+                  for s in ((8, 8), (8, 8), (8,)))
+    res = ck.run_pallas(a, b, bias)
+    out = np.asarray(res[-1] if isinstance(res, (list, tuple)) else res)
+    (want,) = ck.graph.eval_np(a, b, bias)
+    np.testing.assert_allclose(out, want, atol=1e-5)
+
+
+def test_docs_rewrite_md_in_sync():
+    """docs/REWRITE.md is generated; regenerate with `make docs`."""
+    import subprocess
+    import sys
+    gen = subprocess.run(
+        [sys.executable, os.path.join(DOCS, "..", "scripts",
+                                      "gen_rewrite_md.py")],
+        capture_output=True, text=True,
+        env={**os.environ,
+             "PYTHONPATH": os.path.join(DOCS, "..", "src")})
+    assert gen.returncode == 0, gen.stderr
+    with open(os.path.join(DOCS, "REWRITE.md")) as f:
+        assert f.read().rstrip("\n") == gen.stdout.rstrip("\n")
