@@ -2,10 +2,18 @@
 SSD scan, wall-clock on this host + model-cycle derivations.
 
 Prints CSV: name,us_per_call,derived.
+
+``--compiled`` benches the *pipeline-compiled* serving kernels (the
+TensorIR flash/ssd graphs lowered through PassManager schedules) against
+the hand-written pallas kernels on identical data, and writes
+``BENCH_kernels.json`` with wall-clock per backend plus the machine
+model's cycle prediction for each compiled schedule.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -68,7 +76,92 @@ def run() -> list:
     return rows
 
 
-def main():
+def run_compiled() -> list:
+    """Hand-written pallas kernels vs the same math compiled through the
+    stack (TensorIR graph -> PassManager schedule -> backends)."""
+    from repro.core import frontend as fe, pipeline
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.ssd_scan import ssd_scan
+
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # flash attention, one (batch*head) slice
+    sq, sk, d = 32, 64, 8
+    q = rng.standard_normal((1, sq, d)).astype(np.float32)
+    k = rng.standard_normal((1, sk, d)).astype(np.float32)
+    v = rng.standard_normal((1, sk, d)).astype(np.float32)
+    qpos = np.arange(sq)[:, None] + (sk - sq)
+    mask = np.where(np.arange(sk)[None, :] <= qpos, 0.0,
+                    -1e30).astype(np.float32)
+    sched = "lower{tile_m=8,tile_n=8,tile_k=8},fuse-epilogue,grid{vars=2}"
+    ck = pipeline.compile_traced(fe.flash_attention_graph(sq, sk, d),
+                                 pipeline=sched)
+    gi = [q[0] / np.float32(np.sqrt(d)), k[0].T.copy(), v[0], mask]
+    rows.append({
+        "name": f"flash_{sq}x{sk}x{d}", "schedule": sched,
+        "cycles_modeled": ck.cycles.total,
+        "us_hand_pallas_interp": _t(
+            lambda *xs: flash_attention(*xs, interpret=True),
+            q, k, v, reps=1),
+        "us_compiled_jax": _t(lambda *xs: ck.run_jax(*xs), *gi),
+        "us_compiled_pallas_interp": (
+            None if ck.run_pallas is None
+            else _t(lambda *xs: ck.run_pallas(*xs), *gi, reps=1)),
+    })
+
+    # SSD scan, one head
+    S, H, P, N = 64, 2, 4, 4
+    x = rng.standard_normal((S, H, P)).astype(np.float32)
+    dt = rng.uniform(0.01, 0.5, (S, H)).astype(np.float32)
+    A = np.asarray([-0.5, -0.9], np.float32)
+    B = rng.standard_normal((S, N)).astype(np.float32)
+    C = rng.standard_normal((S, N)).astype(np.float32)
+    a = np.repeat(np.exp(dt[:, 0] * A[0])[:, None], P * N, axis=1)
+    u = ((dt[:, 0, None] * x[:, 0, :])[:, :, None]
+         * B[:, None, :]).reshape(S, P * N)
+    ct = np.broadcast_to(C[:, None, :], (S, P, N)).reshape(S, P * N).copy()
+    g = np.kron(np.eye(P), np.ones((N, 1))).astype(np.float32)
+    sched = "lower{tile_m=8,tile_n=8,tile_k=8},fuse-epilogue,grid{vars=1}"
+    ck = pipeline.compile_traced(fe.ssd_scan_graph(S, P, N), pipeline=sched)
+    gi = [a.astype(np.float32), u.astype(np.float32), ct, g]
+    rows.append({
+        "name": f"ssd_{S}x{P}x{N}", "schedule": sched,
+        "cycles_modeled": ck.cycles.total,
+        "us_hand_pallas_interp": _t(
+            lambda *xs: ssd_scan(*xs, chunk=16, interpret=True),
+            x, dt, A, B, C, reps=1),
+        "us_compiled_jax": _t(lambda *xs: ck.run_jax(*xs), *gi),
+        "us_compiled_pallas_interp": (
+            None if ck.run_pallas is None
+            else _t(lambda *xs: ck.run_pallas(*xs), *gi, reps=1)),
+    })
+    return rows
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--compiled", action="store_true",
+                   help="bench hand-written vs pipeline-compiled serving "
+                        "kernels and write a JSON report")
+    p.add_argument("--out", default="BENCH_kernels.json",
+                   help="with --compiled: JSON report path "
+                        "(default BENCH_kernels.json)")
+    args = p.parse_args(argv)
+    if args.compiled:
+        rows = run_compiled()
+        with open(args.out, "w") as f:
+            json.dump({"rows": rows}, f, indent=2)
+        print(f"{'name':14s} {'hand_us':>10s} {'compiled_jax_us':>16s} "
+              f"{'compiled_pl_us':>15s} {'cycles':>10s}")
+        for r in rows:
+            pl_us = r["us_compiled_pallas_interp"]
+            print(f"{r['name']:14s} {r['us_hand_pallas_interp']:10.1f} "
+                  f"{r['us_compiled_jax']:16.1f} "
+                  f"{(0.0 if pl_us is None else pl_us):15.1f} "
+                  f"{r['cycles_modeled']:10d}")
+        print(f"// json written to {args.out}")
+        return
     print("name,us_per_call,derived")
     for name, us, derived in run():
         print(f"{name},{us:.2f},{derived}")

@@ -52,6 +52,23 @@ def main() -> int:
     cosim = block(g + ["--pipeline", "lower", "--emit", "hw",
                        "--simulate", "host"])
 
+    # the serving-kernel walkthrough: flash attention through the stack
+    fl = ["--kernel", "flash:4x8x4"]
+    t4 = "tile_m=4,tile_n=4,tile_k=4"
+    flash_tensor = block(fl)
+    flash_loop = block(fl + ["--pipeline", f"lower{{{t4}}}"])
+    flash_sched = block(
+        fl + ["--pipeline", f"lower{{{t4}}},fuse-epilogue,grid{{vars=2}}"])
+
+    from repro.core import frontend as fe
+    from repro.core.passes import PassError, run_pipeline
+    try:
+        run_pipeline(fe.ssd_scan_graph(8, 2, 4),
+                     f"lower{{{t4}}},grid{{vars=2}}")
+        raise RuntimeError("gridding the scan axis should have diagnosed")
+    except PassError as e:
+        ssd_diag = str(e)
+
     nested = compile_gemm(4, 4, 4, schedule="nested",
                           want_jax=False, want_pallas=False)
     flat = compile_gemm(4, 4, 4, schedule="inner_flattened",
@@ -193,6 +210,49 @@ Add `--trace` for the per-state retired-event trace and `--vcd FILE`
 for a waveform-style dump of the schedule
 (`benchmarks/table1_cycles.py` reports modeled-vs-simulated columns for
 every TABLE I size).
+
+## The serving kernels — carried state through the same pipeline
+
+GEMM's loops are embarrassingly tileable; the serving kernels are not.
+Flash attention's online softmax carries a running max/sum across the
+key axis, and the Mamba SSD scan carries its state across time — the
+first structures in the stack where *which* loop a schedule may
+parallelise is a legality question.  Both are plain TensorIR modules
+(`--kernel flash|decode|ssd`), built with the carried `reduce` / `scan`
+ops:
+
+{flash_tensor}
+
+`lower` gives each carried reduction the online-softmax shape: a `fill`
+initialises the VREG statistic to the reduction identity (`-1e+30` for
+max), a *sequential* carry loop threads it through `reduce<max,acc>`
+steps, and a copy materialises the result — same pattern for `sum`,
+and `scan<linear>` threads its carry row across the time loop:
+
+{flash_loop}
+
+Schedules apply unchanged — `fuse-epilogue` packs the elementwise tail
+into the producer nest and `grid{{vars=2}}` maps the outer rows onto the
+pallas grid — but the carry loops stay `@seq`.  A schedule that tried to
+grid or vectorise a carry axis is refused with a diagnostic instead of
+silently miscompiling (pinned in `tests/test_loop_ir_passes.py`):
+
+```
+$ PYTHONPATH=src python -m repro.core.reproc --kernel ssd:8x2x4 \\
+      --pipeline "lower{{tile_m=4,tile_n=4,tile_k=4}},grid{{vars=2}}"
+error: {ssd_diag}
+```
+
+{flash_sched}
+
+From here the flow is identical to the GEMM's: `lower-to-hw` maps
+`reduce`/`scan` steps onto VPU units (priced by the machine model,
+executed bit-exactly by HwSim against the numpy oracle), and the
+general pallas emitter turns every nest into a `pl.pallas_call` —
+`tests/test_compiled_kernels.py` runs the full differential matrix
+(compiled pallas vs the hand-written kernels in `repro/kernels/` vs
+closed-form numpy) and `benchmarks/kernel_bench.py --compiled` writes
+the wall-clock/cycles comparison to `BENCH_kernels.json`.
 
 ## Where to go next
 

@@ -19,13 +19,15 @@ from typing import Callable, Dict, List, Sequence
 import jax
 import jax.numpy as jnp
 
-from .loop_ir import (EwiseTile, Kernel, Loop, LoopKind, MatmulTile, MemSpace,
-                      Stmt, TileRef, ZeroTile)
+from .loop_ir import (EwiseTile, FillTile, Kernel, Loop, LoopKind, MatmulTile,
+                      MemSpace, ReduceTile, ScanTile, Stmt, TileRef, ZeroTile,
+                      _stmt_written_refs)
 
 _EWISE_JNP = {
     "add": lambda a, b: a + b,
     "sub": lambda a, b: a - b,
     "mul": lambda a, b: a * b,
+    "div": lambda a, b: a / b,
     "maximum": jnp.maximum,
     "relu": lambda a: jnp.maximum(a, 0),
     "gelu": jax.nn.gelu,
@@ -84,6 +86,33 @@ def emit(kernel: Kernel) -> Callable[..., List[jax.Array]]:
                 if s.accumulate:
                     c = read(s.dst, env).astype(jnp.float32) + c
                 write(s.dst, env, c)
+            elif isinstance(s, FillTile):
+                write(s.dst, env, jnp.full(s.dst.tile, s.value, jnp.float32))
+            elif isinstance(s, ReduceTile):
+                src = read(s.src, env)
+                r = (jnp.max if s.kind == "max" else jnp.sum)(
+                    src, axis=-1, keepdims=True)
+                if s.accumulate:
+                    d = read(s.dst, env)
+                    r = jnp.maximum(d, r) if s.kind == "max" else d + r
+                write(s.dst, env, r)
+            elif isinstance(s, ScanTile):
+                srcs = [read(r, env) for r in s.srcs]
+                x = srcs[-1]
+
+                def step(c, row):
+                    if s.kind == "linear":
+                        a_row, x_row = row
+                        c = a_row * c + x_row
+                    else:
+                        c = c + row[0]
+                    return c, c
+
+                rows = (srcs[0], x) if s.kind == "linear" else (x,)
+                carry0 = read(s.carry, env)[0]
+                last, out = jax.lax.scan(step, carry0, rows)
+                write(s.dst, env, out)
+                write(s.carry, env, last[None])
             elif isinstance(s, EwiseTile):
                 if s.op == "ones":
                     write(s.dst, env, jnp.ones(s.dst.tile, jnp.float32))
@@ -137,9 +166,11 @@ def _buffers_written(stmts: Sequence[Stmt]) -> List[str]:
         for s in ss:
             if isinstance(s, Loop):
                 go(s.body)
-            elif isinstance(s, (ZeroTile, MatmulTile, EwiseTile)):
-                if s.dst.buffer.name not in out:
-                    out.append(s.dst.buffer.name)
+            elif isinstance(s, (ZeroTile, MatmulTile, EwiseTile, FillTile,
+                                ReduceTile, ScanTile)):
+                for r in _stmt_written_refs(s):
+                    if r.buffer.name not in out:
+                        out.append(r.buffer.name)
 
     go(stmts)
     return out

@@ -37,8 +37,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .loop_ir import (EwiseTile, Kernel, Loop, LoopKind, MatmulTile, MemSpace,
-                      Stmt, TileRef, ZeroTile)
+from .loop_ir import (EwiseTile, FillTile, Kernel, Loop, LoopKind, MatmulTile,
+                      MemSpace, ReduceTile, ScanTile, Stmt, TileRef, ZeroTile,
+                      _stmt_refs, _stmt_written_refs)
 from .backend_jax import _EWISE_JNP, _JNP_DTYPE
 
 
@@ -207,12 +208,27 @@ def _analyze(kernel: Kernel) -> _Plan:
 
 
 def emit(kernel: Kernel, interpret: bool = True) -> Callable[..., jax.Array]:
-    """Emit ``f(*hbm_inputs) -> out`` as a pallas_call.
+    """Emit ``f(*hbm_inputs) -> out`` for a scheduled kernel.
+
+    Dispatch: the single-nest GEMM classifier (``_analyze``) first — it
+    produces the tight BlockSpec'd pallas_call the contraction schedules
+    want — and the general multi-nest emitter (``emit_general``) for
+    everything else (the serving-kernel graphs: several chained nests
+    with carried reductions and scans).
 
     ``interpret=True`` (default here) runs the kernel body in the pallas
     interpreter so it is exact on CPU; on real TPU pass ``interpret=False``
     to lower through Mosaic.
     """
+    try:
+        return _emit_gemm(kernel, interpret=interpret)
+    except EmitError:
+        return emit_general(kernel, interpret=interpret)
+
+
+def _emit_gemm(kernel: Kernel,
+               interpret: bool = True) -> Callable[..., jax.Array]:
+    """The original single-nest contraction emitter (see module doc)."""
     plan = _analyze(kernel)
     buffers = {b.name: b for b in kernel.params + kernel.scratch}
     out_buf = buffers[plan.out_buffer]
@@ -328,3 +344,269 @@ def _apply_epilogue(epilogue: Sequence[EwiseTile], acc, ref_of, plan: _Plan):
     if plan.out_buffer in local:
         return local[plan.out_buffer]
     return val
+
+
+# --------------------------------------------------------------------------
+# general multi-nest emitter
+# --------------------------------------------------------------------------
+#
+# The serving-kernel graphs lower to *several* top-level nests chained
+# through HBM temporaries (matmul -> mask add -> carried max -> exp ->
+# carried sum -> matmul -> div), which the single-nest classifier above
+# cannot express.  The general emitter maps each top-level statement to
+# its own ``pl.pallas_call``:
+#
+#   * the nest's leading @grid chain becomes the pallas grid; every HBM
+#     buffer the stage touches is passed as a full-array block (constant
+#     index map), and tile addressing happens *inside* the body with
+#     ``pl.dslice`` — grid counters resolve to ``pl.program_id``, inner
+#     @seq/@unrolled/@vector counters to python ints at trace time;
+#   * VREG/VMEM scratch (accumulators, scan carries) become local jnp
+#     values updated functionally — carried state threads through the
+#     trace exactly as the sequential schedule orders it;
+#   * stages communicate through a host-level environment: each stage's
+#     written HBM buffers feed the next stage's inputs.
+#
+# Interior @grid loops (the k-on-grid revisit trick) stay exclusive to
+# the GEMM path — in a multi-nest kernel they would need cross-stage
+# revisit reasoning, so the general emitter refuses them.
+
+
+def _stage_io(stmts: Sequence[Stmt]) -> Tuple[List[str], List[str]]:
+    """(read, written) HBM buffer names under ``stmts``, in first-use
+    order.  The carry of a ScanTile counts as read *and* written."""
+    read: List[str] = []
+    written: List[str] = []
+
+    def go(ss):
+        for s in ss:
+            if isinstance(s, Loop):
+                go(s.body)
+                continue
+            w = {r.buffer.name for r in _stmt_written_refs(s)}
+            for r in _stmt_refs(s):
+                if r.buffer.space != MemSpace.HBM:
+                    continue
+                tgt = written if r.buffer.name in w else read
+                if r.buffer.name not in tgt:
+                    tgt.append(r.buffer.name)
+            if isinstance(s, (MatmulTile, ReduceTile)) and s.accumulate \
+                    and s.dst.buffer.space == MemSpace.HBM:
+                raise EmitError(
+                    f"stage accumulates into HBM buffer "
+                    f"{s.dst.buffer.name} (schedule an accumulator)")
+    go(stmts)
+    return read, written
+
+
+def _emit_stage(kernel: Kernel, top: Stmt, buffers: Dict[str, "Buffer"],
+                interpret: bool):
+    """Build ``stage(env) -> None`` executing one top-level statement as
+    a pallas_call over the host-level buffer environment."""
+    # 1. peel the leading @grid chain
+    grid_vars: List[str] = []
+    grid: List[int] = []
+    cur = top
+    while isinstance(cur, Loop) and cur.kind == LoopKind.GRID:
+        grid_vars.append(cur.var.name)
+        grid.append(cur.var.extent)
+        if len(cur.body) == 1 and isinstance(cur.body[0], Loop) \
+                and cur.body[0].kind == LoopKind.GRID:
+            cur = cur.body[0]
+        else:
+            break
+    inner: List[Stmt] = list(cur.body) if isinstance(cur, Loop) \
+        and cur.kind == LoopKind.GRID else [cur]
+    for s in inner:
+        for n in _walk_stmts([s]):
+            if isinstance(n, Loop) and n.kind == LoopKind.GRID:
+                raise EmitError(
+                    f"{kernel.name}: interior @grid loop %{n.var.name} "
+                    f"(k-on-grid is a single-nest schedule)")
+
+    reads, writes = _stage_io([top])
+    if not writes:
+        raise EmitError(f"{kernel.name}: stage writes no HBM buffer")
+    # the non-grid loops unroll at trace time: refuse schedules so
+    # scalar the trace would blow up (tile-1 nested GEMM belongs to the
+    # XLA backend, not pallas)
+    traced = _traced_stmts(inner)
+    if traced > 4096:
+        raise EmitError(
+            f"{kernel.name}: stage would trace {traced} statements "
+            f"(grid-map or tile the schedule first)")
+    scratch = [b for b in kernel.scratch
+               if b.name in {r.buffer.name for s in _walk_stmts([top])
+                             if not isinstance(s, Loop)
+                             for r in _stmt_refs(s)}]
+
+    def body(*refs):
+        ref_of = dict(zip(reads + writes, refs))
+        local: Dict[str, jax.Array] = {
+            b.name: jnp.zeros(b.shape, _JNP_DTYPE[b.type.dtype])
+            for b in scratch}
+
+        def read(r: TileRef, env):
+            starts = [e.evaluate(env) * t
+                      for e, t in zip(r.index, r.tile)]
+            if r.buffer.name in local:
+                return jax.lax.dynamic_slice(local[r.buffer.name], starts,
+                                             r.tile)
+            ref = ref_of[r.buffer.name]
+            return ref[tuple(pl.dslice(o, t)
+                             for o, t in zip(starts, r.tile))]
+
+        def write(r: TileRef, env, val):
+            starts = [e.evaluate(env) * t
+                      for e, t in zip(r.index, r.tile)]
+            if r.buffer.name in local:
+                local[r.buffer.name] = jax.lax.dynamic_update_slice(
+                    local[r.buffer.name],
+                    val.astype(local[r.buffer.name].dtype), starts)
+                return
+            ref = ref_of[r.buffer.name]
+            idx = tuple(pl.dslice(o, t) for o, t in zip(starts, r.tile))
+            ref[idx] = val.astype(ref.dtype)
+
+        def exec_stmt(s: Stmt, env):
+            if isinstance(s, ZeroTile):
+                write(s.dst, env, jnp.zeros(s.dst.tile, jnp.float32))
+            elif isinstance(s, FillTile):
+                write(s.dst, env,
+                      jnp.full(s.dst.tile, s.value, jnp.float32))
+            elif isinstance(s, MatmulTile):
+                c = jnp.dot(read(s.lhs, env), read(s.rhs, env),
+                            preferred_element_type=jnp.float32)
+                if s.accumulate:
+                    c = read(s.dst, env).astype(jnp.float32) + c
+                write(s.dst, env, c)
+            elif isinstance(s, ReduceTile):
+                r = (jnp.max if s.kind == "max" else jnp.sum)(
+                    read(s.src, env), axis=-1, keepdims=True)
+                if s.accumulate:
+                    d = read(s.dst, env)
+                    r = jnp.maximum(d, r) if s.kind == "max" else d + r
+                write(s.dst, env, r)
+            elif isinstance(s, ScanTile):
+                srcs = [read(r, env) for r in s.srcs]
+
+                def step(c, row):
+                    if s.kind == "linear":
+                        c = row[0] * c + row[1]
+                    else:
+                        c = c + row[0]
+                    return c, c
+
+                carry0 = read(s.carry, env)[0]
+                last, out = jax.lax.scan(step, carry0, tuple(srcs))
+                write(s.dst, env, out)
+                write(s.carry, env, last[None])
+            elif isinstance(s, EwiseTile):
+                if s.op == "ones":
+                    write(s.dst, env, jnp.ones(s.dst.tile, jnp.float32))
+                    return
+                srcs = [read(r, env) for r in s.srcs]
+                if s.op == "copy1":
+                    write(s.dst, env, srcs[0].reshape(s.dst.tile))
+                    return
+                if s.op == "cast":
+                    write(s.dst, env, srcs[0])
+                    return
+                if len(srcs) == 2 and srcs[1].ndim < srcs[0].ndim:
+                    srcs[1] = srcs[1][(None,) * (srcs[0].ndim
+                                                 - srcs[1].ndim)]
+                write(s.dst, env, _EWISE_JNP[s.op](*srcs))
+            else:
+                raise EmitError(
+                    f"{kernel.name}: no pallas emission for "
+                    f"{type(s).__name__}")
+
+        def go(stmts, env):
+            for s in stmts:
+                if isinstance(s, Loop):
+                    for t in range(s.var.extent):
+                        go(s.body, {**env, s.var.name: t})
+                else:
+                    exec_stmt(s, env)
+
+        env0 = {v: pl.program_id(i) for i, v in enumerate(grid_vars)}
+        go(inner, env0)
+
+    specs = {n: pl.BlockSpec(buffers[n].shape,
+                             (lambda rank: lambda *g: (0,) * rank)(
+                                 len(buffers[n].shape)))
+             for n in reads + writes}
+    call = pl.pallas_call(
+        body,
+        grid=tuple(grid) or (1,),
+        in_specs=[specs[n] for n in reads],
+        out_specs=[specs[n] for n in writes],
+        out_shape=[jax.ShapeDtypeStruct(buffers[n].shape,
+                                        _JNP_DTYPE[buffers[n].type.dtype])
+                   for n in writes],
+        interpret=interpret,
+    )
+
+    def stage(env: Dict[str, jax.Array]) -> None:
+        outs = call(*[env[n] for n in reads])
+        for n, a in zip(writes, outs):
+            env[n] = a
+
+    stage.reads, stage.writes = reads, writes
+    return stage
+
+
+def _walk_stmts(stmts):
+    for s in stmts:
+        yield s
+        if isinstance(s, Loop):
+            yield from _walk_stmts(s.body)
+
+
+def _traced_stmts(stmts) -> int:
+    """Leaf statements the stage body will trace (loop trips multiply)."""
+    n = 0
+    for s in stmts:
+        if isinstance(s, Loop):
+            n += s.var.extent * _traced_stmts(s.body)
+        else:
+            n += 1
+    return n
+
+
+def emit_general(kernel: Kernel,
+                 interpret: bool = True) -> Callable[..., jax.Array]:
+    """Emit a multi-nest kernel as a chain of per-nest pallas_calls."""
+    kernel.verify()
+    if len(kernel.outputs) != 1:
+        raise EmitError(f"{kernel.name}: exactly one output supported")
+    buffers = {b.name: b for b in kernel.params + kernel.scratch}
+    stages = [_emit_stage(kernel, top, buffers, interpret)
+              for top in kernel.body]
+    out_name = kernel.outputs[0].name
+    out_names = {b.name for b in kernel.outputs}
+    in_params = [b for b in kernel.params if b.name not in out_names]
+
+    def fn(*inputs):
+        if len(inputs) > len(in_params):
+            raise ValueError(
+                f"{kernel.name}: expected <= {len(in_params)} inputs")
+        env: Dict[str, jax.Array] = {}
+        it = iter(inputs)
+        for b in kernel.params:
+            if b.name in out_names:
+                env[b.name] = jnp.zeros(b.shape, _JNP_DTYPE[b.type.dtype])
+                continue
+            try:
+                env[b.name] = jnp.asarray(next(it),
+                                          _JNP_DTYPE[b.type.dtype])
+            except StopIteration:
+                env[b.name] = jnp.zeros(b.shape, _JNP_DTYPE[b.type.dtype])
+        for stage in stages:
+            stage(env)
+        return env[out_name]
+
+    fn.__name__ = f"stagecc_pallas_{kernel.name}"
+    fn.plan = None                       # general path has no _Plan
+    fn.stages = stages                   # introspection for tests
+    return fn

@@ -11,13 +11,14 @@ from typing import Dict, List, Sequence
 
 import numpy as np
 
-from .loop_ir import (EwiseTile, Kernel, Loop, MatmulTile, MemSpace, Stmt,
-                      TileRef, ZeroTile)
+from .loop_ir import (EwiseTile, FillTile, Kernel, Loop, MatmulTile, MemSpace,
+                      ReduceTile, ScanTile, Stmt, TileRef, ZeroTile)
 
 _EWISE_NP = {
     "add": lambda a, b: a + b,
     "sub": lambda a, b: a - b,
     "mul": lambda a, b: a * b,
+    "div": lambda a, b: a / b,
     "maximum": np.maximum,
     "relu": lambda a: np.maximum(a, 0),
     "gelu": lambda a: 0.5 * a * (1.0 + np.tanh(np.sqrt(2.0 / np.pi)
@@ -26,6 +27,38 @@ _EWISE_NP = {
     "neg": lambda a: -a,
     "copy": lambda a: a,
 }
+
+
+def reduce_tile_np(kind: str, dst: np.ndarray, src: np.ndarray,
+                   accumulate: bool) -> np.ndarray:
+    """Last-axis keepdims reduction of ``src`` combined into ``dst``.
+
+    Shared by the reference interpreter and the HwIR simulator so cosim
+    is bitwise for carried reductions."""
+    r = (np.max if kind == "max" else np.sum)(src, axis=-1, keepdims=True)
+    if accumulate:
+        r = np.maximum(dst, r) if kind == "max" else dst + r
+    return r
+
+
+def scan_tile_np(kind: str, srcs: List[np.ndarray],
+                 carry: np.ndarray) -> np.ndarray:
+    """Row-sequential scan over a (T, C) tile seeded by the (1, C) carry;
+    returns the (T, C) output (its last row is the new carry).  Shared
+    with the HwIR simulator for bitwise cosim."""
+    x = srcs[-1]
+    out = np.empty_like(x)
+    c = carry[0]
+    if kind == "linear":
+        a = srcs[0]
+        for t in range(x.shape[0]):
+            c = a[t] * c + x[t]
+            out[t] = c
+    else:
+        for t in range(x.shape[0]):
+            c = c + x[t]
+            out[t] = c
+    return out
 
 
 def _np_dtype(dtype: str):
@@ -74,6 +107,17 @@ def run(kernel: Kernel, inputs: Sequence[np.ndarray]) -> List[np.ndarray]:
                     go(s.body, {**env, s.var.name: t})
             elif isinstance(s, ZeroTile):
                 write(s.dst, env, 0.0)
+            elif isinstance(s, FillTile):
+                write(s.dst, env, s.value)
+            elif isinstance(s, ReduceTile):
+                write(s.dst, env,
+                      reduce_tile_np(s.kind, read(s.dst, env),
+                                     read(s.src, env), s.accumulate))
+            elif isinstance(s, ScanTile):
+                out = scan_tile_np(s.kind, [read(r, env) for r in s.srcs],
+                                   read(s.carry, env))
+                write(s.dst, env, out)
+                write(s.carry, env, out[-1:])
             elif isinstance(s, MatmulTile):
                 a = read(s.lhs, env).astype(np.float32)
                 b = read(s.rhs, env).astype(np.float32)

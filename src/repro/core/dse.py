@@ -56,7 +56,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from . import hw_ir, hw_sim, ir_text, machine_model
 from .hw_ir import HwModule, HwStep
-from .loop_ir import Kernel, Loop, MemSpace, _stmt_refs
+from .loop_ir import Kernel, Loop, MemSpace, _stmt_refs, _stmt_written_refs
 from .machine_model import (TPU_V5E, CycleReport, MachineModel,
                             ResourceReport)
 from .passes import PassError, PassManager
@@ -225,14 +225,18 @@ def _perfect_pair(kernel: Kernel) -> Optional[Tuple[Loop, Loop]]:
 def vectorize_legal(kernel: Kernel, loop: Loop) -> bool:
     """A loop is SIMD-legal iff every tile written under it is indexed
     by the loop variable (lanes write disjoint tiles).  A reduction
-    loop (GEMM's K: the accumulator index is K-invariant) is not."""
+    loop (GEMM's K: the accumulator index is K-invariant) is not, and
+    neither is any loop threading a carry (a ``ReduceTile`` running
+    statistic, a ``ScanTile`` state row) — ``_stmt_written_refs``
+    surfaces the carry as a written ref, so those loops fail the
+    disjointness test here and ``schedule.vectorize`` raises on them."""
     def written_depends(stmts) -> bool:
         for s in stmts:
             if isinstance(s, Loop):
                 if not written_depends(s.body):
                     return False
             else:
-                for ref in _stmt_refs(s)[:1]:       # dst is always first
+                for ref in _stmt_written_refs(s):
                     used = {v for e in ref.index for v, _ in e.coeffs}
                     if loop.var.name not in used:
                         return False

@@ -91,12 +91,91 @@ def maximum(a: Tracer, b: Tracer) -> Tracer:
     return a._emit("maximum", [b])
 
 
+def div(a: Tracer, b: Tracer) -> Tracer:
+    return a._emit("div", [b])
+
+
+def reduce(a: Tracer, kind: str, axis: int, keepdims: bool = True) -> Tracer:
+    """Carried reduction (``max`` or ``sum``) along ``axis``."""
+    return a._emit("reduce", kind=kind, axis=axis, keepdims=keepdims)
+
+
+def scan(a: Tracer, x: Tracer, axis: int = 0) -> Tracer:
+    """Linear recurrence h_t = a_t * h_{t-1} + x_t along ``axis``."""
+    return a._emit("scan", [x], kind="linear", axis=axis)
+
+
+def cumsum(x: Tracer, axis: int = 0) -> Tracer:
+    return x._emit("scan", kind="cumsum", axis=axis)
+
+
 def transpose(a: Tracer, perm) -> Tracer:
     return a._emit("transpose", perm=tuple(perm))
 
 
 def cast(a: Tracer, dtype: str) -> Tracer:
     return a._emit("cast", dtype=dtype)
+
+
+# --------------------------------------------------------------------------
+# serving-kernel graph builders — the production shapes expressed as
+# TensorIR so the whole pipeline (schedules, DSE, backends) applies to
+# them instead of only to hand-written pallas (ROADMAP open item #1)
+# --------------------------------------------------------------------------
+
+
+def flash_attention_graph(sq: int, sk: int, d: int,
+                          name: str = None) -> Graph:
+    """Softmax attention for one (batch*head) slice as TensorIR.
+
+    Inputs: ``q`` (sq, d) — pre-scaled by 1/sqrt(d); ``kt`` (d, sk) —
+    keys pre-transposed; ``v`` (sk, d); ``mask`` (sq, sk) — additive,
+    0 where attendable and -1e30 where masked (causal/window/valid
+    masking is data, so one graph covers every masking policy).
+
+    The online-softmax statistics of the hand kernel appear here as
+    carried ``reduce`` ops; tiling their reduction axis threads the
+    running max/sum through the carry (see ``lowering.lower_reduce``).
+    """
+    def f(q, kt, v, mask):
+        s = matmul(q, kt) + mask
+        m = reduce(s, kind="max", axis=1)
+        p = exp(s - m)
+        l = reduce(p, kind="sum", axis=1)
+        return div(matmul(p, v), l)
+    return trace(f, [spec((sq, d)), spec((d, sk)), spec((sk, d)),
+                     spec((sq, sk))],
+                 name=name or f"flash_{sq}x{sk}x{d}")
+
+
+def decode_attention_graph(rep: int, smax: int, hd: int,
+                           name: str = None) -> Graph:
+    """Decode attention for one (batch, kv-group) slice: the same
+    online-softmax dataflow as flash at the (rep, smax) decode shape;
+    the KV-cache validity mask arrives as the additive ``mask`` input."""
+    return flash_attention_graph(rep, smax, hd,
+                                 name=name or f"decode_{rep}x{smax}x{hd}")
+
+
+def ssd_scan_graph(s: int, p: int, n: int, name: str = None) -> Graph:
+    """Mamba-2 SSD recurrence for one head as TensorIR.
+
+    The (P, N) state is flattened to PN columns so the recurrence
+    h_t = a_t ⊙ h_{t-1} + u_t is a rank-2 associative ``scan`` over the
+    sequence axis.  Inputs: ``a`` (s, p*n) per-step decay exp(dt*A);
+    ``u`` (s, p*n) the dt*x*B outer-product updates; ``ct`` (s, p*n)
+    C broadcast along P; ``g`` (p*n, p) the 0/1 group-sum matrix that
+    contracts the state dim back to head width (an MXU op, matching the
+    chunked-scan formulation's matmuls).
+    """
+    pn = p * n
+
+    def f(a, u, ct, g):
+        h = scan(a, u, axis=0)
+        return matmul(h * ct, g)
+    return trace(f, [spec((s, pn)), spec((s, pn)), spec((s, pn)),
+                     spec((pn, p))],
+                 name=name or f"ssd_{s}x{p}x{n}")
 
 
 def trace(fn: Callable, in_specs: Sequence[spec], name: str = None) -> Graph:

@@ -57,8 +57,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .loop_ir import (AffineExpr, EwiseTile, Kernel, Loop, LoopKind,
-                      MatmulTile, MemSpace, Stmt, TileRef, ZeroTile)
+from .loop_ir import (AffineExpr, EwiseTile, FillTile, Kernel, Loop, LoopKind,
+                      MatmulTile, MemSpace, ReduceTile, ScanTile, Stmt,
+                      TileRef, ZeroTile)
 from .tensor_ir import dtype_bytes
 
 #: LoopIR loop kinds -> HwIR sequencing disciplines
@@ -546,6 +547,34 @@ class _HwLowerer:
                 "vpu", (min(s.dst.tile_elems, self.max_unit_lanes),), copies)
             return HwStep(s.op, u.name,
                           [self._operand("write", s.dst)] +
+                          [self._operand("read", r) for r in s.srcs])
+        if isinstance(s, FillTile):
+            # only the two fill constants lowering emits have a hardware
+            # spelling: 0.0 reuses the zero broadcast, the reduce-max
+            # identity gets its own op (a constant ROM would be overkill)
+            if s.value == 0.0:
+                op = "zero"
+            elif s.value == -1e30:
+                op = "fill_min"
+            else:
+                raise TypeError(
+                    f"no HwIR lowering for fill constant {s.value!r}")
+            u = self._new_unit(
+                "vpu", (min(s.dst.tile_elems, self.max_unit_lanes),), copies)
+            return HwStep(op, u.name, [self._operand("write", s.dst)])
+        if isinstance(s, ReduceTile):
+            u = self._new_unit(
+                "vpu", (min(s.src.tile_elems, self.max_unit_lanes),), copies)
+            role = "acc" if s.accumulate else "write"
+            return HwStep(f"reduce_{s.kind}", u.name,
+                          [self._operand(role, s.dst),
+                           self._operand("read", s.src)])
+        if isinstance(s, ScanTile):
+            u = self._new_unit(
+                "vpu", (min(s.dst.tile_elems, self.max_unit_lanes),), copies)
+            return HwStep(f"scan_{s.kind}", u.name,
+                          [self._operand("write", s.dst),
+                           self._operand("acc", s.carry)] +
                           [self._operand("read", r) for r in s.srcs])
         raise TypeError(f"no HwIR lowering for statement {type(s).__name__}")
 

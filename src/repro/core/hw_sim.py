@@ -43,7 +43,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from . import backend_ref, machine_model
-from .backend_ref import _EWISE_NP, _np_dtype
+from .backend_ref import _EWISE_NP, _np_dtype, reduce_tile_np, scan_tile_np
 from .hw_ir import HwLoop, HwModule, HwOperand, HwStep
 from .loop_ir import Kernel
 from .machine_model import TPU_V5E, CycleReport, MachineModel
@@ -263,6 +263,21 @@ class _Sim:
             self._put(ops[0], env, 0.0)
         elif step.op == "ones":
             self._put(ops[0], env, 1.0)
+        elif step.op == "fill_min":
+            self._put(ops[0], env, -1e30)
+        elif step.op in ("reduce_max", "reduce_sum"):
+            dst, src = ops
+            # shares the oracle's numpy expression so cosim is bitwise
+            self._put(dst, env, reduce_tile_np(
+                step.op[len("reduce_"):], self._get(dst, env),
+                self._get(src, env), dst.role == "acc"))
+        elif step.op in ("scan_linear", "scan_cumsum"):
+            dst, carry = ops[0], ops[1]
+            srcs = [self._get(o, env) for o in ops[2:]]
+            out = scan_tile_np(step.op[len("scan_"):], srcs,
+                               self._get(carry, env))
+            self._put(dst, env, out)
+            self._put(carry, env, out[-1:])
         elif step.op == "matmul":
             dst, lhs, rhs = ops
             c = (self._get(lhs, env).astype(np.float32)

@@ -55,8 +55,9 @@ from typing import Dict, List, Optional, Tuple, Union
 
 from .hw_ir import (HwCtrl, HwLoop, HwMem, HwModule, HwOperand, HwPort, HwReg,
                     HwStep, HwUnit, LOOP_CTRL_KINDS)
-from .loop_ir import (AffineExpr, Buffer, EwiseTile, Kernel, Loop, LoopKind,
-                      LoopVar, MatmulTile, MemSpace, Stmt, TileRef, ZeroTile)
+from .loop_ir import (AffineExpr, Buffer, EwiseTile, FillTile, Kernel, Loop,
+                      LoopKind, LoopVar, MatmulTile, MemSpace, ReduceTile,
+                      ScanTile, Stmt, TileRef, ZeroTile)
 from .tensor_ir import Graph, TensorType
 
 IR = Union[Graph, Kernel, HwModule]
@@ -131,6 +132,15 @@ def print_tileref(r: TileRef) -> str:
 def print_stmt(s: Stmt) -> List[str]:
     if isinstance(s, ZeroTile):
         return [f"zero {print_tileref(s.dst)}"]
+    if isinstance(s, FillTile):
+        return [f"fill {print_tileref(s.dst)}, {s.value!r}"]
+    if isinstance(s, ReduceTile):
+        kind = f"{s.kind},acc" if s.accumulate else s.kind
+        return [f"reduce<{kind}> {print_tileref(s.dst)}, "
+                f"{print_tileref(s.src)}"]
+    if isinstance(s, ScanTile):
+        refs = ", ".join(print_tileref(r) for r in [s.carry, *s.srcs])
+        return [f"scan<{s.kind}> {print_tileref(s.dst)}, {refs}"]
     if isinstance(s, MatmulTile):
         op = "+=" if s.accumulate else "="
         return [f"{print_tileref(s.dst)} {op} mxu.matmul("
@@ -382,6 +392,9 @@ _ALLOC_RE = re.compile(r"^alloc (\w+): (tensor<[^>]+>) @(\w+)$")
 _FOR_RE = re.compile(r"^for %(\w+) in \[0,(\d+)\) @([\w\-]+) \{$")
 _MATMUL_RE = re.compile(r"^(.*?) (\+?=) mxu\.matmul\((.*)\)$")
 _EWISE_RE = re.compile(r"^(.*?) = vpu\.(\w+)\((.*)\)$")
+_FILL_RE = re.compile(r"^fill (.+)$")
+_REDUCE_RE = re.compile(r"^reduce<(\w+)(,acc)?> (.+)$")
+_SCAN_RE = re.compile(r"^scan<(\w+)> (.+)$")
 
 
 def _parse_buffer(decl: str) -> Buffer:
@@ -440,6 +453,37 @@ def parse_kernel(text: str) -> Kernel:
         if ln.startswith("zero "):
             try:
                 return ZeroTile(_parse_tileref(ln[len("zero "):], by_name))
+            except ValueError as e:
+                raise IRParseError(lineno, ln, str(e))
+        if (mf := _FILL_RE.match(ln)):
+            parts = _split_top(mf.group(1))
+            if len(parts) != 2:
+                raise IRParseError(lineno, ln, "fill takes 'dst, value'")
+            try:
+                return FillTile(_parse_tileref(parts[0], by_name),
+                                float(parts[1]))
+            except ValueError as e:
+                raise IRParseError(lineno, ln, str(e))
+        if (mr := _REDUCE_RE.match(ln)):
+            kind, acc, rest = mr.groups()
+            parts = _split_top(rest)
+            if len(parts) != 2:
+                raise IRParseError(lineno, ln, "reduce takes 'dst, src'")
+            try:
+                return ReduceTile(kind, _parse_tileref(parts[0], by_name),
+                                  _parse_tileref(parts[1], by_name),
+                                  accumulate=bool(acc))
+            except ValueError as e:
+                raise IRParseError(lineno, ln, str(e))
+        if (ms := _SCAN_RE.match(ln)):
+            kind, rest = ms.groups()
+            parts = _split_top(rest)
+            if len(parts) < 3:
+                raise IRParseError(lineno, ln,
+                                   "scan takes 'dst, carry, srcs...'")
+            try:
+                refs = [_parse_tileref(p, by_name) for p in parts]
+                return ScanTile(kind, refs[0], refs[2:], refs[1])
             except ValueError as e:
                 raise IRParseError(lineno, ln, str(e))
         raise IRParseError(lineno, ln, "expected statement")

@@ -198,6 +198,75 @@ class EwiseTile(Stmt):
 
 
 @dataclasses.dataclass
+class FillTile(Stmt):
+    """dst <- value  (carry initialisation to a reduction identity)."""
+
+    dst: TileRef
+    value: float = 0.0
+
+
+@dataclasses.dataclass
+class ReduceTile(Stmt):
+    """dst (⊕)= reduce(src, last axis, keepdims) on the VPU.
+
+    ``kind`` is ``max`` or ``sum``; with ``accumulate`` the freshly
+    reduced tile combines (same ⊕) into ``dst`` — the carried running
+    max/sum of online softmax.  ``dst`` tile is ``src`` tile with its
+    last dimension collapsed to 1.
+    """
+
+    kind: str
+    dst: TileRef
+    src: TileRef
+    accumulate: bool = True
+
+    def __post_init__(self):
+        if self.kind not in ("max", "sum"):
+            raise ValueError(f"reduce tile: bad kind {self.kind!r}")
+        want = self.src.tile[:-1] + (1,)
+        if self.dst.tile != want:
+            raise ValueError(
+                f"reduce tile mismatch: src {self.src.tile} reduces to "
+                f"{want}, dst is {self.dst.tile}")
+
+
+@dataclasses.dataclass
+class ScanTile(Stmt):
+    """dst <- scan of the tile's rows, threading ``carry`` across tiles.
+
+    ``linear``: h_r = a_r ⊙ h_{r-1} + x_r with h_{-1} read from
+    ``carry`` (srcs = [a, x]); ``cumsum`` is the a == 1 case
+    (srcs = [x]).  After the tile, ``carry`` holds the last row — the
+    inter-tile state of the chunked SSD scan.  ``carry``'s tile is one
+    row of ``dst``'s.
+    """
+
+    kind: str
+    dst: TileRef
+    srcs: List[TileRef]
+    carry: TileRef
+
+    def __post_init__(self):
+        if self.kind not in ("linear", "cumsum"):
+            raise ValueError(f"scan tile: bad kind {self.kind!r}")
+        if len(self.srcs) != (2 if self.kind == "linear" else 1):
+            raise ValueError(
+                f"scan<{self.kind}> tile takes "
+                f"{2 if self.kind == 'linear' else 1} sources, "
+                f"got {len(self.srcs)}")
+        want = (1,) + self.dst.tile[1:]
+        if self.carry.tile != want:
+            raise ValueError(
+                f"scan tile carry mismatch: dst {self.dst.tile} carries "
+                f"{want}, carry is {self.carry.tile}")
+        for s in self.srcs:
+            if s.tile != self.dst.tile:
+                raise ValueError(
+                    f"scan tile mismatch: src {s.tile} vs dst "
+                    f"{self.dst.tile}")
+
+
+@dataclasses.dataclass
 class Loop(Stmt):
     var: LoopVar
     kind: LoopKind
@@ -306,12 +375,31 @@ class Kernel:
 
 
 def _stmt_refs(s: Stmt) -> List[TileRef]:
+    """All tile refs of a statement, written destination FIRST (passes
+    and the DSE legality checks rely on refs[0] being the dst).  A
+    ScanTile's carry is read AND written; it is listed last — callers
+    that care about write sets must treat it as written too (see
+    ``_stmt_written_refs``)."""
     if isinstance(s, ZeroTile):
+        return [s.dst]
+    if isinstance(s, FillTile):
         return [s.dst]
     if isinstance(s, MatmulTile):
         return [s.dst, s.lhs, s.rhs]
     if isinstance(s, EwiseTile):
         return [s.dst, *s.srcs]
+    if isinstance(s, ReduceTile):
+        return [s.dst, s.src]
+    if isinstance(s, ScanTile):
+        return [s.dst, *s.srcs, s.carry]
     if isinstance(s, Loop):
         return []
     raise TypeError(f"unknown stmt {type(s)}")
+
+
+def _stmt_written_refs(s: Stmt) -> List[TileRef]:
+    """Tile refs a statement writes (dst, plus a ScanTile's carry)."""
+    if isinstance(s, ScanTile):
+        return [s.dst, s.carry]
+    refs = _stmt_refs(s)
+    return refs[:1]

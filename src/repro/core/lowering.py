@@ -16,9 +16,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
-from .loop_ir import (AffineExpr, Buffer, EwiseTile, Kernel, Loop, LoopKind,
-                      LoopVar, MatmulTile, MemSpace, TileRef, ZeroTile)
-from .tensor_ir import Graph, Op, TensorType, Value
+from .loop_ir import (AffineExpr, Buffer, EwiseTile, FillTile, Kernel, Loop,
+                      LoopKind, LoopVar, MatmulTile, MemSpace, ReduceTile,
+                      ScanTile, TileRef, ZeroTile)
+from .tensor_ir import Graph, Op, TensorType, Value, reduce_identity
 
 
 def fit_tile(tile: int, dim: int) -> int:
@@ -46,7 +47,7 @@ class LoweringOptions:
                                use_accumulator=self.use_accumulator)
 
 
-_EWISE_BIN = {"add", "sub", "mul", "maximum"}
+_EWISE_BIN = {"add", "sub", "mul", "maximum", "div"}
 _EWISE_UN = {"relu", "gelu", "exp", "neg"}
 
 
@@ -131,6 +132,17 @@ class _Lowerer:
                 srcs.append(TileRef(buf, idx, tuple(tiles)))
             elif op.opname == "bias_add" and v.type.rank == 1:
                 srcs.append(TileRef(buf, (idx[-1],), (tiles[-1],)))
+            elif v.type.rank == len(shape) and \
+                    all(db == da or db == 1
+                        for da, db in zip(shape, v.type.shape)):
+                # size-1 broadcast dims (per-row softmax statistics):
+                # pin the index to 0 and the tile to 1 on those dims
+                bidx = tuple(idx[d] if v.type.shape[d] == shape[d]
+                             else AffineExpr.of(None)
+                             for d in range(len(shape)))
+                btile = tuple(tiles[d] if v.type.shape[d] == shape[d] else 1
+                              for d in range(len(shape)))
+                srcs.append(TileRef(buf, bidx, btile))
             else:
                 raise NotImplementedError(
                     f"broadcast lowering for {op.opname} {v.type} vs {shape}")
@@ -183,6 +195,77 @@ class _Lowerer:
                      EwiseTile("copy1", out_ref, [acc_ref])])
         self.body.extend([init, body])
 
+    def lower_reduce(self, op: Op) -> None:
+        """Carried reduction over the last axis: (M, N) -> (M, 1) / (M,).
+
+        The running statistic (max or sum) lives in a VREG accumulator
+        that is *carried* across the sequential k-loop — the online-softmax
+        structure.  Tiling the k axis is legal only because the carry
+        threads through ``ReduceTile(accumulate=True)``; schedule passes
+        that would replicate the k loop spatially must refuse (see
+        ``schedule.carry_axis_reason``).
+        """
+        (src,) = op.inputs
+        kind = op.attrs["kind"]
+        if src.type.rank != 2 or op.attrs.get("axis") != 1:
+            raise NotImplementedError("reduce lowering supports rank-2, axis=1")
+        keepdims = op.attrs.get("keepdims", True)
+        M, N = src.type.shape
+        o = self.opts.clamp(M, 1, N)
+        A = self.buf_for(src)
+        OUT = self.buf_for(op.result)
+        i = LoopVar(self.uid("i"), M // o.tile_m)
+        k = LoopVar(self.uid("k"), N // o.tile_k)
+        acc = Buffer(self.uid("acc"), TensorType((o.tile_m, 1), "float32"),
+                     MemSpace.VREG)
+        self.scratch.append(acc)
+        zero2 = (AffineExpr.of(None), AffineExpr.of(None))
+        acc_ref = TileRef(acc, zero2, (o.tile_m, 1))
+        a_ref = TileRef(A, (AffineExpr.of(i), AffineExpr.of(k)),
+                        (o.tile_m, o.tile_k))
+        kloop = Loop(k, LoopKind.SEQUENTIAL,
+                     [ReduceTile(kind, acc_ref, a_ref, accumulate=True)])
+        if keepdims:
+            out_ref = TileRef(OUT, (AffineExpr.of(i), AffineExpr.of(None)),
+                              (o.tile_m, 1))
+            copy = EwiseTile("copy", out_ref, [acc_ref])
+        else:
+            out_ref = TileRef(OUT, (AffineExpr.of(i),), (o.tile_m,))
+            copy = EwiseTile("copy1", out_ref, [acc_ref])
+        body = Loop(i, LoopKind.SEQUENTIAL,
+                    [FillTile(acc_ref, reduce_identity(kind)), kloop, copy])
+        self.body.append(body)
+
+    def lower_scan(self, op: Op) -> None:
+        """Associative scan along axis 0: h_t = a_t * h_{t-1} + x_t.
+
+        The carry row (last state of the previous time tile) lives in a
+        VREG buffer threaded across the sequential time loop; column tiles
+        are independent and free to parallelise, the time axis is not.
+        """
+        kind = op.attrs["kind"]
+        if op.result.type.rank != 2 or op.attrs.get("axis") != 0:
+            raise NotImplementedError("scan lowering supports rank-2, axis=0")
+        x = op.inputs[-1]
+        S, C = x.type.shape
+        ts = fit_tile(self.opts.tile_m, S)
+        tc = fit_tile(self.opts.tile_n, C)
+        OUT = self.buf_for(op.result)
+        j = LoopVar(self.uid("j"), C // tc)
+        t = LoopVar(self.uid("t"), S // ts)
+        carry = Buffer(self.uid("carry"), TensorType((1, tc), "float32"),
+                       MemSpace.VREG)
+        self.scratch.append(carry)
+        zero2 = (AffineExpr.of(None), AffineExpr.of(None))
+        carry_ref = TileRef(carry, zero2, (1, tc))
+        tj = (AffineExpr.of(t), AffineExpr.of(j))
+        srcs = [TileRef(self.buf_for(v), tj, (ts, tc)) for v in op.inputs]
+        dst = TileRef(OUT, tj, (ts, tc))
+        tloop = Loop(t, LoopKind.SEQUENTIAL,
+                     [ScanTile(kind, dst, srcs, carry_ref)])
+        body = Loop(j, LoopKind.SEQUENTIAL, [FillTile(carry_ref, 0.0), tloop])
+        self.body.append(body)
+
     # ---- driver --------------------------------------------------------------
 
     def run(self) -> Kernel:
@@ -193,6 +276,10 @@ class _Lowerer:
                 self.lower_matmul(op)
             elif op.opname == "reduce_sum":
                 self.lower_reduce_sum(op)
+            elif op.opname == "reduce":
+                self.lower_reduce(op)
+            elif op.opname == "scan":
+                self.lower_scan(op)
             elif op.opname in _EWISE_BIN | _EWISE_UN | {"bias_add"}:
                 self.lower_ewise(op)
             else:

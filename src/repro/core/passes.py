@@ -206,6 +206,9 @@ def _grid(k: Kernel, vars: int = 2) -> Kernel:
         if not loops:
             break
         loop = loops[0]
+        reason = schedule.carry_axis_reason(loop, LoopKind.GRID)
+        if reason:
+            raise ValueError(f"grid: {reason}")
         loop.kind = LoopKind.GRID
         count += 1
         stmts = loop.body

@@ -118,23 +118,32 @@ def compile_traced(fn_or_graph, in_specs: Optional[Sequence[spec]] = None,
                    want_jax: bool = True,
                    want_pallas: bool = True,
                    interpret: bool = True,
-                   canonicalize: bool = False) -> CompiledKernel:
+                   canonicalize: bool = False,
+                   pipeline: Optional[str] = None) -> CompiledKernel:
     """Compile through the full stack; with ``canonicalize=True`` the
     level-agnostic ``canonicalize`` pass runs between lowerings (on the
     TensorIR input, on the scheduled LoopIR, and on the HwIR module) —
     semantics are preserved (cosim-checked in the test suite) but the
     canonical form may drop degenerate structure (extent-1 loops,
     duplicate datapath units), so modeled cycles/resources can differ
-    from the uncanonicalized spelling."""
+    from the uncanonicalized spelling.
+
+    ``pipeline`` overrides the canned ``schedule``/``tile`` pair with an
+    explicit pass-pipeline string (the ``reproc --pipeline`` spelling) —
+    the schedule label on the artifact becomes the pipeline text.
+    """
     if isinstance(fn_or_graph, Graph):
         graph = fn_or_graph
     else:
         graph = trace(fn_or_graph, in_specs)
-    tile = tile or ({"m": 1, "n": 1, "k": 1}
-                    if schedule in ("nested", "inner_flattened")
-                    else {"m": 128, "n": 128, "k": 128})
-    # clamp tiles to the actual problem inside lowering
-    pipe = _pipeline_for(schedule, tile)
+    if pipeline is not None:
+        pipe = schedule = pipeline
+    else:
+        tile = tile or ({"m": 1, "n": 1, "k": 1}
+                        if schedule in ("nested", "inner_flattened")
+                        else {"m": 128, "n": 128, "k": 128})
+        # clamp tiles to the actual problem inside lowering
+        pipe = _pipeline_for(schedule, tile)
     if canonicalize:
         pipe = f"canonicalize,{pipe},canonicalize"
     pres = PassManager.parse(pipe).run(graph)
@@ -150,7 +159,7 @@ def compile_traced(fn_or_graph, in_specs: Optional[Sequence[spec]] = None,
     run_ref = lambda *xs: backend_ref.run(kernel, xs)
     run_jax = backend_jax.emit_jit(kernel) if want_jax else None
     run_pal = None
-    if want_pallas and schedule in ("tpu_mxu", "tpu_mxu_kgrid"):
+    if want_pallas:
         try:
             run_pal = backend_pallas.emit(kernel, interpret=interpret)
         except backend_pallas.EmitError:

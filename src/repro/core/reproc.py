@@ -214,10 +214,42 @@ def simulate_report(args, art) -> str:
     return "\n".join(lines)
 
 
+_KERNEL_GRAPHS = {
+    # name -> (builder, default dims) — the serving kernels as TensorIR
+    "flash": (fe.flash_attention_graph, (8, 16, 4)),
+    "decode": (fe.decode_attention_graph, (4, 16, 4)),
+    "ssd": (fe.ssd_scan_graph, (16, 2, 4)),
+}
+
+
+def kernel_graph(spec_str: str) -> Graph:
+    """Build a serving-kernel input module from ``NAME`` or ``NAME:AxBxC``
+    (``flash:8x16x4`` — dims as the builder's positional arguments)."""
+    name, _, dims = spec_str.partition(":")
+    if name not in _KERNEL_GRAPHS:
+        raise ValueError(
+            f"--kernel expects one of {', '.join(_KERNEL_GRAPHS)} "
+            f"(optionally NAME:AxBxC), got {spec_str!r}")
+    builder, default = _KERNEL_GRAPHS[name]
+    if dims:
+        try:
+            args = tuple(int(d) for d in dims.lower().split("x"))
+        except ValueError:
+            raise ValueError(f"--kernel dims must be AxBxC, got {dims!r}")
+        if len(args) != len(default):
+            raise ValueError(
+                f"--kernel {name} takes {len(default)} dims, got {dims!r}")
+    else:
+        args = default
+    return builder(*args)
+
+
 def _load_input(args) -> "ir_text.IR":
     if args.input:
         with open(args.input) as f:
             return ir_text.parse_ir(f.read())
+    if args.kernel:
+        return kernel_graph(args.kernel)
     m, n, k = 64, 16, 32
     if args.gemm:
         try:
@@ -245,6 +277,11 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--epilogue", choices=("none", "relu", "bias_relu"),
                    default="bias_relu",
                    help="epilogue for the built-in GEMM input")
+    p.add_argument("--kernel", metavar="NAME[:AxBxC]",
+                   help="use a serving kernel as the input module: "
+                        "flash (SQxSKxD), decode (REPxSMAXxHD), or "
+                        "ssd (SxPxN), e.g. 'flash:8x16x4'; dims default "
+                        "to a small smoke shape")
     p.add_argument("--emit", metavar="LEVEL",
                    help="lower the final artifact to LEVEL (tensor|loop|"
                         "hw|verilog) with default passes before printing")
@@ -332,6 +369,11 @@ def _run(args, out) -> int:
         hint = f"; did you mean {close[0]!r}?" if close else ""
         print(f"error: --emit: invalid choice {args.emit!r}{hint} "
               f"(choose from {', '.join(_EMIT_LEVELS)})", file=sys.stderr)
+        return 2
+    if args.kernel and (args.gemm or args.input):
+        other = "--gemm" if args.gemm else "--input"
+        print(f"error: --kernel and {other} both name an input module; "
+              f"pick one", file=sys.stderr)
         return 2
     if (args.trace or args.vcd) and not args.simulate:
         flag = "--trace" if args.trace else "--vcd"

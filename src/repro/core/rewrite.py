@@ -54,8 +54,9 @@ import threading
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .hw_ir import HwLoop, HwModule, HwStep
-from .loop_ir import (AffineExpr, EwiseTile, Kernel, Loop, MatmulTile, Stmt,
-                      TileRef, ZeroTile, _stmt_refs)
+from .loop_ir import (AffineExpr, EwiseTile, FillTile, Kernel, Loop,
+                      MatmulTile, ReduceTile, ScanTile, Stmt, TileRef,
+                      ZeroTile, _stmt_refs, _stmt_written_refs)
 from .tensor_ir import Graph, Op
 
 
@@ -470,6 +471,14 @@ def _map_stmt_refs(stmts: Sequence[Stmt], fn) -> None:
         elif isinstance(s, EwiseTile):
             s.dst = fn(s.dst)
             s.srcs = [fn(r) for r in s.srcs]
+        elif isinstance(s, FillTile):
+            s.dst = fn(s.dst)
+        elif isinstance(s, ReduceTile):
+            s.dst, s.src = fn(s.dst), fn(s.src)
+        elif isinstance(s, ScanTile):
+            s.dst = fn(s.dst)
+            s.srcs = [fn(r) for r in s.srcs]
+            s.carry = fn(s.carry)
 
 
 @register_canonical_pattern("loop")
@@ -505,12 +514,11 @@ def _buffer_names(stmts: Sequence[Stmt], written: bool) -> set:
                 continue
             refs = _stmt_refs(s)
             if written:
-                out.add(refs[0].buffer.name)        # dst is always first
-                if isinstance(s, MatmulTile) and s.accumulate:
-                    pass                            # acc also reads; see reads
+                # _stmt_written_refs: dst, plus the carry for ScanTile
+                out.update(r.buffer.name for r in _stmt_written_refs(s))
             else:
                 out.update(r.buffer.name for r in refs[1:])
-                if isinstance(s, MatmulTile) and s.accumulate:
+                if isinstance(s, (MatmulTile, ReduceTile)) and s.accumulate:
                     out.add(s.dst.buffer.name)      # read-modify-write
     go(stmts)
     return out

@@ -20,8 +20,9 @@ from __future__ import annotations
 from typing import List, Optional, Tuple
 
 from . import rewrite
-from .loop_ir import (AffineExpr, Buffer, EwiseTile, Kernel, Loop, LoopKind,
-                      LoopVar, MatmulTile, MemSpace, Stmt, TileRef, ZeroTile)
+from .loop_ir import (AffineExpr, Buffer, EwiseTile, FillTile, Kernel, Loop,
+                      LoopKind, LoopVar, MatmulTile, MemSpace, ReduceTile,
+                      ScanTile, Stmt, TileRef, ZeroTile)
 from .rewrite import OneShotPattern, RewriteDriver, RewriteError
 
 
@@ -32,6 +33,53 @@ from .rewrite import OneShotPattern, RewriteDriver, RewriteError
 
 def _rewrite_refs(stmts: List[Stmt], fn) -> None:
     rewrite._map_stmt_refs(stmts, fn)
+
+
+def _body_stmts(stmts):
+    for s in stmts:
+        yield s
+        if isinstance(s, Loop):
+            yield from _body_stmts(s.body)
+
+
+def carry_axis_reason(loop: Loop, kind: LoopKind) -> Optional[str]:
+    """Why re-annotating ``loop`` as ``kind`` would break a carried
+    reduction/scan in its body — ``None`` when legal.
+
+    Spatial kinds (@grid/@vector) replicate the loop's datapath, so a
+    loop that *iterates a carry* (the running max/sum of an online
+    softmax, the state of an SSD scan) cannot take them: each replica
+    would see only its own slice of the recurrence.  SEQUENTIAL and
+    UNROLLED preserve program order and stay legal, as does splitting
+    the axis (both halves remain sequential).  ``MatmulTile``
+    k-accumulation is exempt — the pallas backend threads that carry
+    with a revisit-aware ``pl.when`` init.
+    """
+    if kind not in (LoopKind.GRID, LoopKind.VECTOR):
+        return None
+    v = loop.var.name
+    # accumulators (re)initialised inside the body are confined to one
+    # iteration — only a carry that *crosses* iterations of this loop
+    # (its init lives outside) makes the spatial kind illegal
+    inits = {s.dst.buffer.name for s in _body_stmts(loop.body)
+             if isinstance(s, (FillTile, ZeroTile))}
+    for s in _body_stmts(loop.body):
+        if isinstance(s, ReduceTile) and s.accumulate and \
+                s.dst.buffer.name not in inits and \
+                not any(var == v for e in s.dst.index for var, _ in e.coeffs):
+            return (f"loop %{v} iterates the carried reduction axis of "
+                    f"reduce<{s.kind}> into {s.dst.buffer.name}: "
+                    f"@{kind.value} would replicate the running statistic "
+                    f"spatially without threading the carry (keep it @seq, "
+                    f"unroll it, or split it)")
+        if isinstance(s, ScanTile) and \
+                any(var == v for var, _ in s.dst.index[0].coeffs):
+            return (f"loop %{v} iterates the scan axis of scan<{s.kind}> "
+                    f"into {s.dst.buffer.name}: the carry threads "
+                    f"sequentially, so @{kind.value} on the time axis "
+                    f"would miscompile (keep it @seq, unroll it, or "
+                    f"split it)")
+    return None
 
 
 def _run_one_shot(kernel: Kernel, pat: OneShotPattern,
@@ -64,6 +112,9 @@ class SetLoopKind(OneShotPattern):
         loop = siblings[i]
         if not isinstance(loop, Loop) or loop.var.name != self.var:
             return None
+        reason = carry_axis_reason(loop, self.kind)
+        if reason:
+            raise RewriteError(f"set-loop-kind: {reason}")
         loop.kind = self.kind
         return (1, [loop])
 
@@ -359,11 +410,14 @@ def schedule_tpu_mxu(kernel: Kernel) -> Kernel:
     *good* kind of datapath reuse)."""
     loops = kernel.loops()
     # lowering emits i, j, k nests per matmul; grid-map the first two levels
+    # (carry-iterating loops stay sequential: the running softmax/scan
+    # state cannot be replicated across grid steps)
     tops = [s for s in kernel.body if isinstance(s, Loop)]
     for top in tops:
-        top.kind = LoopKind.GRID
+        if carry_axis_reason(top, LoopKind.GRID) is None:
+            top.kind = LoopKind.GRID
         inner = [s for s in top.body if isinstance(s, Loop)]
-        if inner:
+        if inner and carry_axis_reason(inner[0], LoopKind.GRID) is None:
             inner[0].kind = LoopKind.GRID
     kernel.verify()
     return kernel

@@ -118,7 +118,14 @@ def _infer_matmul(in_types, attrs):
 def _infer_ewise_binary(in_types, attrs):
     a, b = in_types
     if a.shape != b.shape and b.shape != ():
-        raise TypeError(f"elementwise shape mismatch: {a} vs {b}")
+        # numpy-style broadcast of the SECOND operand only, restricted to
+        # size-1 dims (e.g. an (M, N) map against per-row (M, 1) statistics
+        # — the online-softmax normalisation shape)
+        ok = (b.rank == a.rank
+              and all(db == da or db == 1
+                      for da, db in zip(a.shape, b.shape)))
+        if not ok:
+            raise TypeError(f"elementwise shape mismatch: {a} vs {b}")
     if a.dtype != b.dtype:
         raise TypeError(f"elementwise dtype mismatch: {a} vs {b}")
     return a
@@ -143,6 +150,79 @@ def _infer_reduce_sum(in_types, attrs):
     return TensorType(shape, a.dtype)
 
 
+#: reduction kinds with their combine semantics and identity element
+REDUCE_KINDS = ("max", "sum")
+#: scan kinds: ``linear`` is the carried recurrence h_t = a_t*h_{t-1}+x_t
+#: (the SSD/Mamba state update); ``cumsum`` is the a_t == 1 special case
+SCAN_KINDS = ("linear", "cumsum")
+#: identity element of a max reduction (matches the hand-written kernels'
+#: _NEG so masked attention rows behave identically through both paths)
+REDUCE_NEG_INF = -1e30
+
+
+def reduce_identity(kind: str) -> float:
+    return REDUCE_NEG_INF if kind == "max" else 0.0
+
+
+def _infer_reduce(in_types, attrs):
+    (a,) = in_types
+    kind = attrs.get("kind")
+    if kind not in REDUCE_KINDS:
+        raise TypeError(f"reduce: kind must be one of {REDUCE_KINDS}, "
+                        f"got {kind!r}")
+    axis = attrs.get("axis")
+    if not isinstance(axis, (int, np.integer)) or not 0 <= axis < a.rank:
+        raise TypeError(f"reduce: axis {axis!r} out of range for {a}")
+    keepdims = attrs.get("keepdims", True)
+    if keepdims:
+        shape = tuple(1 if i == axis else d for i, d in enumerate(a.shape))
+    else:
+        shape = tuple(d for i, d in enumerate(a.shape) if i != axis)
+    return TensorType(shape, a.dtype)
+
+
+def _eval_reduce(a, **at):
+    fn = np.max if at["kind"] == "max" else np.sum
+    return fn(a, axis=at["axis"], keepdims=at.get("keepdims", True))
+
+
+def _infer_scan(in_types, attrs):
+    kind = attrs.get("kind")
+    if kind not in SCAN_KINDS:
+        raise TypeError(f"scan: kind must be one of {SCAN_KINDS}, "
+                        f"got {kind!r}")
+    if kind == "linear":
+        if len(in_types) != 2:
+            raise TypeError(f"scan<linear> takes (decay, update) operands, "
+                            f"got {len(in_types)}")
+        a, x = in_types
+        if a.shape != x.shape or a.dtype != x.dtype:
+            raise TypeError(f"scan: carry-shape mismatch: decay {a} vs "
+                            f"update {x}")
+    else:
+        if len(in_types) != 1:
+            raise TypeError(f"scan<cumsum> takes one operand, "
+                            f"got {len(in_types)}")
+        x = in_types[0]
+    axis = attrs.get("axis")
+    if not isinstance(axis, (int, np.integer)) or not 0 <= axis < x.rank:
+        raise TypeError(f"scan: axis {axis!r} out of range for {x}")
+    return x
+
+
+def _eval_scan(*arrays, **at):
+    axis = at["axis"]
+    if at["kind"] == "cumsum":
+        return np.cumsum(arrays[0], axis=axis)
+    a, x = (np.moveaxis(np.asarray(v), axis, 0) for v in arrays)
+    h = np.zeros_like(x)
+    carry = np.zeros_like(x[0])
+    for t in range(x.shape[0]):
+        carry = a[t] * carry + x[t]
+        h[t] = carry
+    return np.moveaxis(h, 0, axis)
+
+
 def _infer_transpose(in_types, attrs):
     (a,) = in_types
     perm = attrs["perm"]
@@ -162,6 +242,7 @@ register_op("add", _infer_ewise_binary, lambda a, b, **at: a + b)
 register_op("sub", _infer_ewise_binary, lambda a, b, **at: a - b)
 register_op("mul", _infer_ewise_binary, lambda a, b, **at: a * b)
 register_op("maximum", _infer_ewise_binary, lambda a, b, **at: np.maximum(a, b))
+register_op("div", _infer_ewise_binary, lambda a, b, **at: a / b)
 register_op("relu", _infer_ewise_unary, lambda a, **at: np.maximum(a, 0))
 register_op("gelu", _infer_ewise_unary, lambda a, **at: (
     0.5 * a * (1.0 + np.tanh(np.sqrt(2.0 / np.pi) * (a + 0.044715 * a**3)))))
@@ -170,6 +251,8 @@ register_op("neg", _infer_ewise_unary, lambda a, **at: -a)
 register_op("bias_add", _infer_bias_add, lambda a, b, **at: a + b[None, :])
 register_op("reduce_sum", _infer_reduce_sum,
             lambda a, **at: np.sum(a, axis=at["axis"]))
+register_op("reduce", _infer_reduce, _eval_reduce)
+register_op("scan", _infer_scan, _eval_scan)
 register_op("transpose", _infer_transpose,
             lambda a, **at: np.transpose(a, at["perm"]))
 register_op("cast", _infer_cast, lambda a, **at: a.astype(at["dtype"]

@@ -230,3 +230,121 @@ def test_reduce_sum_lowering():
     np.testing.assert_allclose(out, x.sum(1), rtol=1e-5)
     (outj,) = backend_jax.emit_jit(kern)(x)
     np.testing.assert_allclose(np.asarray(outj), x.sum(1), rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# carry-axis schedule legality: the first non-embarrassingly-tileable
+# structure in the pipeline.  Tiling a carried reduction/scan along the
+# carry axis without threading the carry must *diagnose*, never silently
+# miscompile.
+# --------------------------------------------------------------------------
+
+
+def _flash_kern(tile=4):
+    from repro.core.frontend import flash_attention_graph
+    return lower_graph(flash_attention_graph(8, 16, 4),
+                       LoweringOptions(tile_m=tile, tile_n=tile, tile_k=tile))
+
+
+def _ssd_kern(tile=4):
+    from repro.core.frontend import ssd_scan_graph
+    return lower_graph(ssd_scan_graph(8, 2, 4),
+                       LoweringOptions(tile_m=tile, tile_n=tile, tile_k=tile))
+
+
+def _loop_with(kern, stmt_type):
+    from repro.core.loop_ir import Loop
+    for l in kern.loops():
+        if any(isinstance(s, stmt_type) for s in l.body):
+            return l
+    raise AssertionError(f"no loop carries a {stmt_type.__name__}")
+
+
+def test_grid_carried_reduce_axis_diagnoses():
+    from repro.core.loop_ir import ReduceTile
+    kern = _flash_kern()
+    kloop = _loop_with(kern, ReduceTile)
+    with pytest.raises(ValueError, match="carried reduction axis"):
+        schedule.parallelize(kern, kloop.var.name)
+    assert kloop.kind == LoopKind.SEQUENTIAL  # diagnosis left IR untouched
+
+
+def test_vectorize_carried_reduce_axis_diagnoses():
+    from repro.core.loop_ir import ReduceTile
+    kern = _flash_kern()
+    kloop = _loop_with(kern, ReduceTile)
+    with pytest.raises(ValueError, match="carried reduction axis"):
+        schedule.vectorize(kern, kloop.var.name)
+
+
+def test_grid_scan_time_axis_diagnoses():
+    from repro.core.loop_ir import ScanTile
+    kern = _ssd_kern()
+    tloop = _loop_with(kern, ScanTile)
+    with pytest.raises(ValueError, match="scan axis"):
+        schedule.parallelize(kern, tloop.var.name)
+
+
+def test_grid_pass_pipeline_diagnoses_scan_axis():
+    """grid{vars=2} descends into the scan nest's time loop -> the grid
+    *pass* (not just the rewrite) surfaces the carry diagnostic."""
+    from repro.core.frontend import ssd_scan_graph
+    with pytest.raises(ValueError, match="scan axis"):
+        run_pipeline(ssd_scan_graph(8, 2, 4),
+                     "lower{tile_m=4,tile_n=4,tile_k=4},grid{vars=2}")
+
+
+def test_grid_row_axis_of_carried_reduce_is_legal():
+    """Only the carry axis is restricted: the row (statistic-per-row)
+    loop of the same nest grids fine."""
+    from repro.core.loop_ir import Loop, ReduceTile
+    kern = _flash_kern()
+    kloop = _loop_with(kern, ReduceTile)
+    row = next(l for l in kern.loops()
+               if any(s is kloop for s in l.body))
+    schedule.parallelize(kern, row.var.name)
+    assert row.kind == LoopKind.GRID
+    kern.verify()
+
+
+def test_split_scan_time_axis_stays_exact():
+    """Splitting the time axis keeps iterations in carry order — legal,
+    and the recurrence still matches the sequential oracle."""
+    from repro.core.loop_ir import ScanTile
+    kern = _ssd_kern(tile=4)
+    tloop = _loop_with(kern, ScanTile)
+    schedule.split(kern, tloop.var.name, 2)
+    kern.verify()
+    rng = np.random.default_rng(9)
+    a = rng.uniform(0.1, 0.9, (8, 8)).astype(np.float32)
+    u = rng.standard_normal((8, 8)).astype(np.float32)
+    ct = rng.standard_normal((8, 8)).astype(np.float32)
+    g = np.kron(np.eye(2), np.ones((4, 1))).astype(np.float32)
+    (out,) = backend_ref.run(kern, [a, u, ct, g])
+    h = np.zeros(8)
+    want = np.empty((8, 8))
+    for t in range(8):
+        h = a[t] * h + u[t]
+        want[t] = h
+    np.testing.assert_allclose(out, (want * ct) @ g, rtol=1e-4, atol=1e-5)
+
+
+def test_unroll_carried_reduce_axis_stays_exact():
+    """@unrolled replicates the datapath but retires in order — the carry
+    threads, so unrolling the reduction axis is legal and exact."""
+    from repro.core.frontend import flash_attention_graph
+    from repro.core.loop_ir import ReduceTile
+    kern = _flash_kern(tile=2)
+    kloop = _loop_with(kern, ReduceTile)
+    schedule.unroll(kern, kloop.var.name)
+    kern.verify()
+    rng = np.random.default_rng(11)
+    q = rng.standard_normal((8, 4)).astype(np.float32)
+    kt = rng.standard_normal((4, 16)).astype(np.float32)
+    v = rng.standard_normal((16, 4)).astype(np.float32)
+    mask = np.zeros((8, 16), np.float32)
+    (out,) = backend_ref.run(kern, [q, kt, v, mask])
+    s = q @ kt + mask
+    p = np.exp(s - s.max(1, keepdims=True))
+    want = (p @ v) / p.sum(1, keepdims=True)
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-5)
