@@ -33,6 +33,12 @@ _EWISE_JNP = {
     "gelu": jax.nn.gelu,
     "exp": jnp.exp,
     "neg": lambda a: -a,
+    "tanh": jnp.tanh,
+    "sigmoid": jax.nn.sigmoid,
+    "sqrt": jnp.sqrt,
+    "rsqrt": jax.lax.rsqrt,
+    "log1p": jnp.log1p,
+    "abs": jnp.abs,
     "copy": lambda a: a,
 }
 

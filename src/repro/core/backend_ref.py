@@ -25,6 +25,12 @@ _EWISE_NP = {
                                                * (a + 0.044715 * a ** 3))),
     "exp": np.exp,
     "neg": lambda a: -a,
+    "tanh": np.tanh,
+    "sigmoid": lambda a: 1.0 / (1.0 + np.exp(-a)),
+    "sqrt": np.sqrt,
+    "rsqrt": lambda a: 1.0 / np.sqrt(a),
+    "log1p": np.log1p,
+    "abs": np.abs,
     "copy": lambda a: a,
 }
 

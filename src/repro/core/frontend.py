@@ -191,3 +191,29 @@ def trace(fn: Callable, in_specs: Sequence[spec], name: str = None) -> Graph:
     g.set_outputs(*[t.value for t in outs])
     g.verify()
     return g
+
+
+# --------------------------------------------------------------------------
+# raising: traced JAX -> TensorIR (the other way into this frontend)
+# --------------------------------------------------------------------------
+# ``raise`` is a Python keyword, so ``core/raise.py`` cannot be imported with
+# ordinary syntax; these delegators give raising a home in the frontend
+# namespace next to trace()/the hand-written kernel graphs.
+
+
+def raise_jaxpr(fn, *in_specs, **kw):
+    """Trace ``fn`` at ``in_specs`` and raise the jaxpr into TensorIR.
+
+    Returns a ``RaisedGraph`` (see ``core/raise.py``): the graph plus the
+    captured-constant bindings, runnable via ``run_ref``/``compile``."""
+    import importlib
+    return importlib.import_module("repro.core.raise").raise_jaxpr(
+        fn, *in_specs, **kw)
+
+
+def raise_model_blocks(config_name, **kw):
+    """Raise every fused forward-pass block of one model config; returns
+    per-block ``BlockReport``s (raised graph or diagnostic)."""
+    import importlib
+    return importlib.import_module("repro.core.raise").raise_model_blocks(
+        config_name, **kw)

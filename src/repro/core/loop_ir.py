@@ -192,7 +192,8 @@ class MatmulTile(Stmt):
 class EwiseTile(Stmt):
     """dst = op(srcs...) elementwise on the VPU."""
 
-    op: str  # add | mul | sub | maximum | relu | gelu | exp | neg | copy | cast
+    op: str  # add | mul | sub | maximum | div | relu | gelu | exp | neg
+    # | tanh | sigmoid | sqrt | rsqrt | log1p | abs | copy | cast
     dst: TileRef
     srcs: List[TileRef]
 

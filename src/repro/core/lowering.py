@@ -48,7 +48,8 @@ class LoweringOptions:
 
 
 _EWISE_BIN = {"add", "sub", "mul", "maximum", "div"}
-_EWISE_UN = {"relu", "gelu", "exp", "neg"}
+_EWISE_UN = {"relu", "gelu", "exp", "neg",
+             "tanh", "sigmoid", "sqrt", "rsqrt", "log1p", "abs"}
 
 
 class _Lowerer:

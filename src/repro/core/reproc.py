@@ -14,6 +14,8 @@ IR after every stage::
         --simulate host --trace --vcd /tmp/gemm.vcd   # full transaction
     python -m repro.core.reproc --gemm 32x32x32 --epilogue none \
         --dse --pareto-csv pareto.csv   # design-space exploration
+    python -m repro.core.reproc --raise qwen2_7b          # raisability report
+    python -m repro.core.reproc --raise qwen2_7b:mlp      # raised TensorIR
     python -m repro.core.reproc --list-passes --markdown
 
 Pipeline stages separate on ``;`` or ``,``; stage arguments go in braces
@@ -244,12 +246,34 @@ def kernel_graph(spec_str: str) -> Graph:
     return builder(*args)
 
 
+def raised_block_graph(spec_str: str) -> Graph:
+    """Raise one model block named as ``CONFIG:BLOCK`` (see ``--raise``)
+    into its TensorIR graph."""
+    import importlib
+    raising = importlib.import_module("repro.core.raise")
+    config, _, block = spec_str.partition(":")
+    reports = raising.raise_model_blocks(config)
+    by_name = {r.block: r for r in reports}
+    if block not in by_name:
+        raise ValueError(
+            f"--raise: config {config!r} has no block {block!r}; "
+            f"available: {', '.join(sorted(by_name))}")
+    rep = by_name[block]
+    if rep.raised is None:
+        raise ValueError(
+            f"--raise: block {config}:{block} is not raisable:\n"
+            f"{rep.error}")
+    return rep.raised.graph
+
+
 def _load_input(args) -> "ir_text.IR":
     if args.input:
         with open(args.input) as f:
             return ir_text.parse_ir(f.read())
     if args.kernel:
         return kernel_graph(args.kernel)
+    if args.raise_spec:
+        return raised_block_graph(args.raise_spec)
     m, n, k = 64, 16, 32
     if args.gemm:
         try:
@@ -282,6 +306,13 @@ def build_parser() -> argparse.ArgumentParser:
                         "flash (SQxSKxD), decode (REPxSMAXxHD), or "
                         "ssd (SxPxN), e.g. 'flash:8x16x4'; dims default "
                         "to a small smoke shape")
+    p.add_argument("--raise", dest="raise_spec", metavar="CONFIG[:BLOCK]",
+                   help="raise a (reduced) model config's forward-pass "
+                        "block from traced JAX into TensorIR and use it as "
+                        "the input module, e.g. 'qwen2_7b:mlp'; without "
+                        ":BLOCK, print the per-block raisability report "
+                        "(raised graphs + unraisable-primitive "
+                        "diagnostics) and exit")
     p.add_argument("--emit", metavar="LEVEL",
                    help="lower the final artifact to LEVEL (tensor|loop|"
                         "hw|verilog) with default passes before printing")
@@ -375,6 +406,27 @@ def _run(args, out) -> int:
         print(f"error: --kernel and {other} both name an input module; "
               f"pick one", file=sys.stderr)
         return 2
+    if args.raise_spec and (args.kernel or args.gemm or args.input):
+        other = ("--kernel" if args.kernel
+                 else "--gemm" if args.gemm else "--input")
+        print(f"error: --raise and {other} both name an input module; "
+              f"pick one", file=sys.stderr)
+        return 2
+    if args.raise_spec and ":" not in args.raise_spec:
+        if args.pipeline or args.emit or args.simulate \
+                or args.dse is not None:
+            print("error: '--raise CONFIG' prints the raisability report "
+                  "and takes no pipeline; name a block as CONFIG:BLOCK to "
+                  "get an input module", file=sys.stderr)
+            return 2
+        import importlib
+        raising = importlib.import_module("repro.core.raise")
+        try:
+            print(raising.raising_report(args.raise_spec), file=out, end="")
+        except (KeyError, ValueError) as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 1
+        return 0
     if (args.trace or args.vcd) and not args.simulate:
         flag = "--trace" if args.trace else "--vcd"
         print(f"error: {flag} requires --simulate", file=sys.stderr)

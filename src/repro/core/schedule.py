@@ -294,6 +294,22 @@ class FuseEpiloguePattern(rewrite.Pattern):
         prod_tile = _store_tile(a, prod)
         if prod_tile is not None and ew.dst.tile[-len(prod_tile):] != prod_tile:
             return None
+        # the fused stmt lands at the END of the loop at depth
+        # len(b_vars), so the producer's store of `prod` must happen
+        # inside that loop (a matmul accumulates its HBM dst there).  A
+        # carried reduce stores its result via a copy from the
+        # accumulator *outside* the inner loop — fusing would read the
+        # stale pre-reduction tile, so keep the separate nest.
+        target = a
+        d = 1
+        while d < len(b_vars):
+            nxt = [s for s in target.body if isinstance(s, Loop)]
+            if not nxt:
+                break
+            target = nxt[0]
+            d += 1
+        if _store_tile(target, prod) is None:
+            return None
         # substitute the consumer's loop vars by the producer's outer vars
         mapping = dict(zip([v.name for v in b_vars],
                            [v.name for v in a_vars]))

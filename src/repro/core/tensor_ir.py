@@ -248,6 +248,13 @@ register_op("gelu", _infer_ewise_unary, lambda a, **at: (
     0.5 * a * (1.0 + np.tanh(np.sqrt(2.0 / np.pi) * (a + 0.044715 * a**3)))))
 register_op("exp", _infer_ewise_unary, lambda a, **at: np.exp(a))
 register_op("neg", _infer_ewise_unary, lambda a, **at: -a)
+register_op("tanh", _infer_ewise_unary, lambda a, **at: np.tanh(a))
+register_op("sigmoid", _infer_ewise_unary,
+            lambda a, **at: 1.0 / (1.0 + np.exp(-a)))
+register_op("sqrt", _infer_ewise_unary, lambda a, **at: np.sqrt(a))
+register_op("rsqrt", _infer_ewise_unary, lambda a, **at: 1.0 / np.sqrt(a))
+register_op("log1p", _infer_ewise_unary, lambda a, **at: np.log1p(a))
+register_op("abs", _infer_ewise_unary, lambda a, **at: np.abs(a))
 register_op("bias_add", _infer_bias_add, lambda a, b, **at: a + b[None, :])
 register_op("reduce_sum", _infer_reduce_sum,
             lambda a, **at: np.sum(a, axis=at["axis"]))

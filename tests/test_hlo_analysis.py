@@ -117,3 +117,136 @@ def test_cache_threading_scan_not_overcounted():
     # L x full-cache-per-iteration (the bug) would be ~2x this bound;
     # one-time donation copies/initialisation stay well under it.
     assert st.bytes < 7.5 * full_cache, st.bytes
+
+
+# --------------------------------------------------------------------------
+# synthetic-HLO regressions: the parser paths that real jax traces only
+# exercise incidentally (trip-count recovery, iota replica_groups inside
+# a multiplied body, fusion multiplicity vs fused-internal bytes)
+# --------------------------------------------------------------------------
+
+_SYNTH_WHILE = """
+HloModule synth_while
+
+%cond (p: (f32[4,4], s32[])) -> pred[] {
+  %p = (f32[4,4], s32[]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=1
+  %lim = s32[] constant(11)
+  ROOT %lt = pred[] compare(%i, %lim), direction=LT
+}
+
+%body (q: (f32[4,4], s32[])) -> (f32[4,4], s32[]) {
+  %q = (f32[4,4], s32[]) parameter(0)
+  %x = f32[4,4]{1,0} get-tuple-element(%q), index=0
+  %d = f32[4,4]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %j = s32[] get-tuple-element(%q), index=1
+  %one = s32[] constant(1)
+  %n = s32[] add(%j, %one)
+  ROOT %t = (f32[4,4], s32[]) tuple(%d, %n)
+}
+
+ENTRY %main (a: f32[4,4]) -> f32[4,4] {
+  %a = f32[4,4]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (f32[4,4], s32[]) tuple(%a, %z)
+  %w = (f32[4,4], s32[]) while(%t0), condition=%cond, body=%body
+  ROOT %r = f32[4,4]{1,0} get-tuple-element(%w), index=0
+}
+"""
+
+
+def test_synthetic_while_trip_recovery():
+    """Trip count comes from the loop-condition constant (11), NOT the
+    body's own constant(1) — and multiplies the body's dot flops."""
+    st = analyze_hlo_module(_SYNTH_WHILE)
+    assert st.while_trips == {"body": 11}
+    np.testing.assert_allclose(st.flops, 11 * 2 * 4 * 4 * 4)
+
+
+_SYNTH_COLL_WHILE = """
+HloModule synth_coll
+
+%ccond (p: (f32[2048], s32[])) -> pred[] {
+  %p = (f32[2048], s32[]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=1
+  %lim = s32[] constant(3)
+  ROOT %lt = pred[] compare(%i, %lim), direction=LT
+}
+
+%cbody (q: (f32[2048], s32[])) -> (f32[2048], s32[]) {
+  %q = (f32[2048], s32[]) parameter(0)
+  %x = f32[2048]{0} get-tuple-element(%q), index=0
+  %ar = f32[2048]{0} all-reduce(%x), replica_groups=[4,8]<=[32], to_apply=%sum
+  %j = s32[] get-tuple-element(%q), index=1
+  %one = s32[] constant(1)
+  %n = s32[] add(%j, %one)
+  ROOT %t = (f32[2048], s32[]) tuple(%ar, %n)
+}
+
+ENTRY %cmain (a: f32[2048]) -> f32[2048] {
+  %a = f32[2048]{0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (f32[2048], s32[]) tuple(%a, %z)
+  %w = (f32[2048], s32[]) while(%t0), condition=%ccond, body=%cbody
+  ROOT %r = f32[2048]{0} get-tuple-element(%w), index=0
+}
+"""
+
+
+def test_synthetic_iota_replica_groups_in_while():
+    """Iota-form replica_groups=[4,8]<=[32] means groups of EIGHT (the
+    second factor), and a collective in a trip-3 body is charged 3x."""
+    st = analyze_hlo_module(_SYNTH_COLL_WHILE)
+    assert st.collectives.counts == {"all-reduce": 3}
+    per_call = 2.0 * (8 - 1) / 8 * 2048 * 4       # ring all-reduce, G=8
+    np.testing.assert_allclose(st.collectives.bytes_by_kind["all-reduce"],
+                               3 * per_call)
+
+
+_SYNTH_FUSION_WHILE = """
+HloModule synth_fusion
+
+%fcomp (fp: f32[4,4]) -> f32[4,4] {
+  %fp = f32[4,4]{1,0} parameter(0)
+  ROOT %fd = f32[4,4]{1,0} dot(%fp, %fp), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+%fcond (p: (f32[4,4], s32[])) -> pred[] {
+  %p = (f32[4,4], s32[]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=1
+  %lim = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %lim), direction=LT
+}
+
+%fbody (q: (f32[4,4], s32[])) -> (f32[4,4], s32[]) {
+  %q = (f32[4,4], s32[]) parameter(0)
+  %x = f32[4,4]{1,0} get-tuple-element(%q), index=0
+  %f = f32[4,4]{1,0} fusion(%x), kind=kLoop, calls=%fcomp
+  %j = s32[] get-tuple-element(%q), index=1
+  %one = s32[] constant(1)
+  %n = s32[] add(%j, %one)
+  ROOT %t = (f32[4,4], s32[]) tuple(%f, %n)
+}
+
+ENTRY %fmain (a: f32[4,4]) -> f32[4,4] {
+  %a = f32[4,4]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (f32[4,4], s32[]) tuple(%a, %z)
+  %w = (f32[4,4], s32[]) while(%t0), condition=%fcond, body=%fbody
+  ROOT %r = f32[4,4]{1,0} get-tuple-element(%w), index=0
+}
+"""
+
+
+def test_synthetic_fusion_multiplicity_and_fused_bytes():
+    """A dot reached through fusion -> calls= inside a trip-5 while is
+    charged 5x flops, while the fusion INTERNAL ops contribute no HBM
+    bytes (register traffic) — only the fusion's own result + params."""
+    st = analyze_hlo_module(_SYNTH_FUSION_WHILE)
+    assert st.while_trips == {"fbody": 5}
+    np.testing.assert_allclose(st.flops, 5 * 2 * 4 * 4 * 4)
+    # bytes: fusion charges result(64) + param(64) per call = 128/call;
+    # the s32 add is 12/call; the cond compare (1+4+4)=9 runs trips+1
+    # times.  If fused internals leaked in, the dot would add >= 192/call.
+    expected = 5 * (128 + 12) + 6 * 9
+    np.testing.assert_allclose(st.bytes, expected)
