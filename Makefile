@@ -8,14 +8,15 @@ test:
 	$(PY) -m pytest -x -q
 
 # regenerate the generated docs (docs/PASSES.md from the pass registry,
-# docs/LOWERING.md, docs/DSE.md, docs/REWRITE.md and docs/RAISING.md
-# from live output)
+# docs/LOWERING.md, docs/DSE.md, docs/REWRITE.md, docs/RAISING.md and
+# docs/SERVING.md from live output)
 docs:
 	$(PY) -m repro.core.reproc --list-passes --markdown > docs/PASSES.md
 	$(PY) scripts/gen_lowering_md.py > docs/LOWERING.md
 	$(PY) scripts/gen_dse_md.py > docs/DSE.md
 	$(PY) scripts/gen_rewrite_md.py > docs/REWRITE.md
 	$(PY) scripts/gen_raising_md.py > docs/RAISING.md
+	$(PY) scripts/gen_serving_md.py > docs/SERVING.md
 
 # CI gate: fail if any generated doc drifts from compiler output
 docs-check:
@@ -29,3 +30,5 @@ docs-check:
 	diff -u docs/REWRITE.md /tmp/REWRITE.md.gen
 	$(PY) scripts/gen_raising_md.py > /tmp/RAISING.md.gen
 	diff -u docs/RAISING.md /tmp/RAISING.md.gen
+	$(PY) scripts/gen_serving_md.py > /tmp/SERVING.md.gen
+	diff -u docs/SERVING.md /tmp/SERVING.md.gen

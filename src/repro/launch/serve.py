@@ -3,11 +3,20 @@
 Example (CPU-runnable):
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --reduced \
       --batch 4 --prompt-len 16 --gen 32
+
+``--continuous`` serves a deterministic load-generator stream through
+the batched continuous engine instead (one vmap'd decode step across
+all slots; see ``repro.serve.continuous``) and prints the latency
+metrics snapshot:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --reduced \
+      --continuous --slots 4 --requests 16 --rate 4
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 
 import jax
 import numpy as np
@@ -15,6 +24,34 @@ import numpy as np
 from repro.configs.base import get_config, reduced
 from repro.models.model import Model, RunConfig
 from repro.serve.engine import Engine, EngineConfig, throughput_stats
+
+
+def _serve_continuous(cfg, model, params, args) -> None:
+    from repro.serve import loadgen
+    from repro.serve.continuous import ContinuousEngine, Request
+    from repro.serve.metrics import ServeMetrics, WallClock
+
+    load = loadgen.LoadConfig(
+        num_requests=args.requests, vocab_size=cfg.vocab_size,
+        seed=args.seed, rate=args.rate,
+        prompt=loadgen.LengthDist("uniform", 4, args.prompt_len),
+        output=loadgen.LengthDist("uniform", 2, args.gen))
+    metrics = ServeMetrics(WallClock(), slots=args.slots)
+    engine = ContinuousEngine(model, params, slots=args.slots,
+                              max_len=args.prompt_len + args.gen + 1,
+                              temperature=args.temperature, seed=args.seed,
+                              queue_limit=args.queue_limit, metrics=metrics)
+    for r in loadgen.generate_stream(load):
+        while not engine.submit(Request(r.rid, r.prompt, r.max_new)):
+            engine.step()                    # backpressure: drain a step
+    engine.drain()
+    snap = metrics.snapshot()
+    print(f"[serve] continuous: {snap['requests']['completed']} requests, "
+          f"{snap['tokens']['decode']} tokens, "
+          f"{snap['tokens_per_s']:.1f} tok/s, "
+          f"ttft p50={snap['ttft']['p50']*1e3:.1f}ms "
+          f"p99={snap['ttft']['p99']*1e3:.1f}ms")
+    print(json.dumps(snap, indent=2, sort_keys=True))
 
 
 def main():
@@ -26,6 +63,13 @@ def main():
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve a load-generator stream through the "
+                         "batched continuous engine")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=4.0)
+    ap.add_argument("--queue-limit", type=int, default=None)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -35,6 +79,10 @@ def main():
     model = Model(cfg, RunConfig(max_seq=max_len))
     params = model.init(jax.random.PRNGKey(args.seed))
     print(f"[serve] arch={cfg.name} params={model.param_count():,}")
+
+    if args.continuous:
+        _serve_continuous(cfg, model, params, args)
+        return
 
     rng = np.random.default_rng(args.seed)
     prompts = rng.integers(0, cfg.vocab_size,

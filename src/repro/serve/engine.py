@@ -5,6 +5,12 @@ inference dry-run cells lower (prefill_32k lowers prefill; decode_32k and
 long_500k lower decode against a full cache).  ``Engine`` drives them for
 real generation (greedy or temperature sampling) with continuous batch
 slots.
+
+Continuous batching lives next door: the production engine is
+:class:`repro.serve.continuous.ContinuousEngine` (ONE vmap-batched jit'd
+decode step across all occupied slots, async admission queue,
+backpressure); :class:`SerialSlotEngine` below is the original per-slot
+B=1 decode loop, kept as the bit-exact differential reference.
 """
 
 from __future__ import annotations
@@ -63,7 +69,13 @@ class Engine:
     def generate(self, prompts: np.ndarray, steps: int,
                  extra_embeds=None, eos_id: Optional[int] = None
                  ) -> np.ndarray:
-        """prompts: (B, P) int32 -> (B, P+steps) generated continuation."""
+        """prompts: (B, P) int32 -> (B, P+steps) generated continuation.
+
+        Rows that have emitted ``eos_id`` are frozen: every subsequent
+        position is ``eos_id`` (not whatever the decoder keeps sampling
+        into a finished row), so outputs are stable however long the
+        other rows keep the batch alive.
+        """
         B, P = prompts.shape
         cache = self.model.cache_init(B, self.cfg.max_len)
         key = jax.random.PRNGKey(self.cfg.seed)
@@ -74,6 +86,8 @@ class Engine:
         tok = self._sample(logits, sub)[:, None]
         done = jnp.zeros((B,), bool)
         for _ in range(steps):
+            if eos_id is not None:
+                tok = jnp.where(done[:, None], jnp.int32(eos_id), tok)
             out.append(tok)
             if eos_id is not None:
                 done = done | (tok[:, 0] == eos_id)
@@ -85,40 +99,48 @@ class Engine:
         return np.asarray(jnp.concatenate(out, axis=1))
 
 
-def throughput_stats(engine: Engine, prompts: np.ndarray, steps: int
-                     ) -> Dict[str, float]:
+def real_token_count(out: np.ndarray, prompt_len: int,
+                     eos_id: Optional[int] = None) -> int:
+    """Generated tokens actually produced: everything after the prompt,
+    counting each finished row only up to (and including) its first
+    ``eos_id`` — the post-eos padding the engine emits is not work."""
+    gen = out[:, prompt_len:]
+    if eos_id is None:
+        return int(gen.size)
+    total = 0
+    for row in gen:
+        hits = np.flatnonzero(row == eos_id)
+        total += int(hits[0]) + 1 if hits.size else row.size
+    return total
+
+
+def throughput_stats(engine: Engine, prompts: np.ndarray, steps: int,
+                     eos_id: Optional[int] = None) -> Dict[str, float]:
     import time
     t0 = time.perf_counter()
-    out = engine.generate(prompts, steps)
+    out = engine.generate(prompts, steps, eos_id=eos_id)
     dt = time.perf_counter() - t0
-    new_tokens = out.shape[0] * (out.shape[1] - prompts.shape[1])
+    new_tokens = real_token_count(out, prompts.shape[1], eos_id)
     return {"wall_s": dt, "tokens": new_tokens,
             "tok_per_s": new_tokens / dt}
 
 
 # --------------------------------------------------------------------------
-# continuous batching
+# continuous batching — serial reference implementation
 # --------------------------------------------------------------------------
 
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray               # (P,) int32
-    max_new: int
-    out: Optional[np.ndarray] = None
+from repro.serve.continuous import ContinuousEngine, Request  # noqa: E402
 
 
-class ContinuousEngine:
-    """Slot-based continuous batching: a fixed decode batch of ``slots``
-    where finished/empty slots are immediately refilled from the queue
-    (prefill for one joining request runs while the other slots keep
-    their caches — per-slot caches are independent (B dim), so admission
-    is a cache write into that slot's rows).
+class SerialSlotEngine:
+    """Per-slot continuous batching: the original implementation, kept
+    as the differential reference for :class:`ContinuousEngine`.
 
-    This is the serving-runtime pattern the inference dry-run shapes
-    imply at scale (decode_32k: 128 resident sequences); here it runs on
-    CPU with reduced models to validate the scheduler logic end to end.
+    A fixed decode batch of ``slots`` where finished/empty slots are
+    immediately refilled from the queue; every slot decodes with its own
+    B=1 jit'd step (``slots`` XLA dispatches per generated token — the
+    batched engine replaces this loop with one vmap'd step and must
+    produce bit-identical greedy token streams).
     """
 
     def __init__(self, model: Model, params, slots: int = 4,
@@ -142,35 +164,40 @@ class ContinuousEngine:
         """Run all requests to completion; returns rid -> generated ids."""
         queue = list(requests)
         results: Dict[int, np.ndarray] = {}
-        # independent per-slot caches (batch dim 1 each)
-        slot_cache = [self.model.cache_init(1, self.max_len)
-                      for _ in range(self.slots)]
+        # per-slot caches are allocated inside admit(); slots start empty
+        slot_cache: list = [None] * self.slots
         slot_req: list = [None] * self.slots
         slot_tok = jnp.zeros((self.slots, 1), jnp.int32)
         slot_left = np.zeros(self.slots, np.int64)
         slot_hist: list = [[] for _ in range(self.slots)]
 
-        def admit(s):
-            if not queue:
-                return False
-            req = queue.pop(0)
-            cache = self.model.cache_init(1, self.max_len)
-            logits, cache = self._prefill_one(
-                self.params, cache, jnp.asarray(req.prompt[None, :]))
-            self.key, sub = jax.random.split(self.key)
-            tok = self._sample(logits, sub)
-            slot_cache[s] = cache
-            slot_req[s] = req
-            slot_hist[s] = [int(tok[0])]
-            slot_left[s] = req.max_new - 1
-            nonlocal slot_tok
-            slot_tok = slot_tok.at[s, 0].set(tok[0])
-            return True
-
         def _finish(s):
             req = slot_req[s]
             results[req.rid] = np.asarray(slot_hist[s], np.int32)
             slot_req[s] = None
+
+        def admit(s):
+            nonlocal slot_tok
+            while queue:
+                req = queue.pop(0)
+                cache = self.model.cache_init(1, self.max_len)
+                logits, cache = self._prefill_one(
+                    self.params, cache, jnp.asarray(req.prompt[None, :]))
+                self.key, sub = jax.random.split(self.key)
+                tok = self._sample(logits, sub)
+                if req.max_new <= 1:
+                    # the prefill sampled this request's only token; a
+                    # decode pass would emit a second one (max_new=1
+                    # off-by-one) — finish here instead
+                    results[req.rid] = np.asarray([int(tok[0])], np.int32)
+                    continue
+                slot_cache[s] = cache
+                slot_req[s] = req
+                slot_hist[s] = [int(tok[0])]
+                slot_left[s] = req.max_new - 1
+                slot_tok = slot_tok.at[s, 0].set(tok[0])
+                return True
+            return False
 
         for s in range(self.slots):
             admit(s)

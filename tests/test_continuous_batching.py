@@ -1,5 +1,7 @@
 """Continuous-batching scheduler: results must match single-request
-generation exactly (greedy), regardless of slot scheduling order."""
+generation exactly (greedy), regardless of slot scheduling order — and
+the batched engine (one vmap'd jit'd decode step across all slots) must
+be bit-identical to the serial per-slot reference engine."""
 
 import jax
 import numpy as np
@@ -8,7 +10,8 @@ import pytest
 from repro.configs.base import get_config, reduced
 from repro.models.model import Model, RunConfig
 from repro.serve.engine import (ContinuousEngine, Engine, EngineConfig,
-                                Request)
+                                Request, SerialSlotEngine)
+from repro.serve.metrics import ServeMetrics, VirtualClock
 
 
 @pytest.fixture(scope="module")
@@ -17,6 +20,23 @@ def setup():
     model = Model(cfg, RunConfig(max_seq=64))
     params = model.init(jax.random.PRNGKey(0))
     return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def setup_ssm():
+    cfg = reduced(get_config("mamba2_130m"))
+    model = Model(cfg, RunConfig(max_seq=64))
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _mixed_requests(cfg, n=6, seed=1):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        (4 + i,)).astype(np.int32),
+                    max_new=int(rng.integers(1, 8)))
+            for i in range(n)]
 
 
 def test_continuous_matches_sequential(setup):
@@ -48,3 +68,106 @@ def test_more_requests_than_slots(setup):
     assert sorted(got) == list(range(7))
     for v in got.values():
         assert len(v) == 3
+
+
+@pytest.mark.parametrize("fixture", ["setup", "setup_ssm"])
+def test_batched_bit_identical_to_serial(fixture, request):
+    """Acceptance: the vmap-batched decode step emits bit-identical
+    greedy token streams to the old per-slot B=1 engine on a mixed
+    request set (different prompt lengths, different max_new incl. 1)."""
+    cfg, model, params = request.getfixturevalue(fixture)
+    reqs = _mixed_requests(cfg)
+    batched = ContinuousEngine(model, params, slots=2, max_len=64).serve(
+        [Request(r.rid, r.prompt, r.max_new) for r in reqs])
+    serial = SerialSlotEngine(model, params, slots=2, max_len=64).serve(
+        [Request(r.rid, r.prompt, r.max_new) for r in reqs])
+    assert sorted(batched) == sorted(serial) == [r.rid for r in reqs]
+    for r in reqs:
+        np.testing.assert_array_equal(batched[r.rid], serial[r.rid],
+                                      err_msg=f"request {r.rid}")
+        assert len(batched[r.rid]) == r.max_new
+
+
+@pytest.mark.parametrize("engine_cls", [ContinuousEngine, SerialSlotEngine])
+def test_max_new_one_emits_exactly_one_token(setup, engine_cls):
+    """Regression: admit() samples the first token at prefill, so a
+    max_new=1 request must finish WITHOUT a decode step (the old
+    engine emitted 2 tokens)."""
+    cfg, model, params = setup
+    reqs = [Request(rid=0, prompt=np.arange(4, dtype=np.int32), max_new=1),
+            Request(rid=1, prompt=np.arange(5, dtype=np.int32), max_new=3)]
+    got = engine_cls(model, params, slots=2, max_len=32).serve(reqs)
+    assert len(got[0]) == 1
+    assert len(got[1]) == 3
+    eng = Engine(model, params, EngineConfig(max_len=32))
+    want = eng.generate(reqs[0].prompt[None, :], 1)[0, 4:]
+    np.testing.assert_array_equal(got[0], want)
+
+
+def test_submit_step_api_and_backpressure(setup):
+    cfg, model, params = setup
+    eng = ContinuousEngine(model, params, slots=2, max_len=32,
+                           queue_limit=2)
+    reqs = [Request(rid=i, prompt=np.arange(4, dtype=np.int32), max_new=4)
+            for i in range(5)]
+    assert eng.submit(reqs[0])
+    assert eng.submit(reqs[1])
+    assert not eng.submit(reqs[2])       # queue full -> backpressure
+    assert eng.queue_depth == 2
+    eng.step()                           # admits into both slots + 1 decode
+    assert eng.active_slots == 2 and eng.queue_depth == 0
+    assert eng.submit(reqs[2]) and eng.submit(reqs[3])
+    eng.drain()
+    assert not eng.busy
+    assert sorted(eng.results) == [0, 1, 2, 3]
+    for v in eng.results.values():
+        assert len(v) == 4
+
+
+def test_batched_engine_records_metrics(setup):
+    cfg, model, params = setup
+    metrics = ServeMetrics(VirtualClock(), slots=2)
+    eng = ContinuousEngine(model, params, slots=2, max_len=32,
+                           metrics=metrics)
+    reqs = [Request(rid=i, prompt=np.arange(3 + i, dtype=np.int32),
+                    max_new=3) for i in range(4)]
+    eng.serve(reqs)
+    snap = metrics.snapshot()
+    assert snap["requests"]["submitted"] == 4
+    assert snap["requests"]["completed"] == 4
+    assert snap["tokens"]["decode"] == 4 * 3
+    assert snap["tokens"]["prefill"] == sum(3 + i for i in range(4))
+    assert snap["ttft"]["count"] == 4
+    assert snap["tpot"]["count"] == 4 * 2     # gaps between 3 tokens
+    assert snap["slot_utilization"] > 0
+
+
+def test_max_len_truncates_generation(setup):
+    """A request whose prompt+output would overflow max_len finishes at
+    the cache boundary instead of writing past it."""
+    cfg, model, params = setup
+    req = Request(rid=0, prompt=np.arange(8, dtype=np.int32), max_new=50)
+    got = ContinuousEngine(model, params, slots=1, max_len=16).serve([req])
+    ref = SerialSlotEngine(model, params, slots=1, max_len=16).serve(
+        [Request(0, req.prompt, 50)])
+    np.testing.assert_array_equal(got[0], ref[0])
+    assert len(got[0]) < 50
+
+
+def test_temperature_sampling_stays_in_vocab(setup):
+    cfg, model, params = setup
+    eng = ContinuousEngine(model, params, slots=2, max_len=32,
+                           temperature=1.0, seed=3)
+    reqs = [Request(rid=i, prompt=np.arange(4, dtype=np.int32), max_new=4)
+            for i in range(3)]
+    got = eng.serve(reqs)
+    for v in got.values():
+        assert v.min() >= 0 and v.max() < cfg.vocab_size
+
+    # per-slot keys are folded from (seed, rid): same seed -> same streams
+    eng2 = ContinuousEngine(model, params, slots=2, max_len=32,
+                            temperature=1.0, seed=3)
+    got2 = eng2.serve([Request(i, np.arange(4, dtype=np.int32), 4)
+                       for i in range(3)])
+    for rid in got:
+        np.testing.assert_array_equal(got[rid], got2[rid])

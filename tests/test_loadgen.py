@@ -1,0 +1,81 @@
+"""Load generator: replayable seeds, arrival processes, length bounds."""
+
+import numpy as np
+import pytest
+
+from repro.serve.loadgen import (GenRequest, LengthDist, LoadConfig,
+                                 generate_stream, stream_digest)
+
+
+def _streams_equal(a, b):
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        assert x.rid == y.rid
+        assert x.arrival == y.arrival
+        assert x.max_new == y.max_new
+        np.testing.assert_array_equal(x.prompt, y.prompt)
+
+
+def test_same_seed_same_stream():
+    cfg = LoadConfig(num_requests=40, seed=7, process="poisson")
+    _streams_equal(generate_stream(cfg), generate_stream(cfg))
+    assert stream_digest(generate_stream(cfg)) == \
+        stream_digest(generate_stream(cfg))
+
+
+def test_different_seed_different_stream():
+    a = generate_stream(LoadConfig(num_requests=40, seed=1))
+    b = generate_stream(LoadConfig(num_requests=40, seed=2))
+    assert stream_digest(a) != stream_digest(b)
+
+
+@pytest.mark.parametrize("process", ["poisson", "bursty", "uniform"])
+def test_processes_produce_monotone_arrivals(process):
+    cfg = LoadConfig(num_requests=64, seed=3, process=process, rate=8.0)
+    stream = generate_stream(cfg)
+    arr = np.asarray([r.arrival for r in stream])
+    assert (np.diff(arr) >= 0).all()
+    assert arr[0] > 0
+
+
+def test_poisson_rate_roughly_matches():
+    cfg = LoadConfig(num_requests=2000, seed=0, process="poisson", rate=10.0)
+    stream = generate_stream(cfg)
+    mean_gap = stream[-1].arrival / len(stream)
+    assert 0.08 <= mean_gap <= 0.125          # 1/rate within ~25%
+
+
+def test_bursty_has_higher_variance_than_poisson():
+    kw = dict(num_requests=2000, seed=0, rate=4.0)
+    pois = generate_stream(LoadConfig(process="poisson", **kw))
+    burst = generate_stream(LoadConfig(process="bursty", burst_rate=64.0,
+                                       burst_fraction=0.2, **kw))
+    cv = lambda s: np.std(np.diff([0.0] + [r.arrival for r in s])) \
+        / np.mean(np.diff([0.0] + [r.arrival for r in s]))
+    assert cv(burst) > cv(pois)
+
+
+def test_lengths_respect_bounds_and_vocab():
+    cfg = LoadConfig(num_requests=100, seed=5, vocab_size=17,
+                     prompt=LengthDist("lognormal", 2, 9, mu=1.5),
+                     output=LengthDist("uniform", 3, 5))
+    for r in generate_stream(cfg):
+        assert 2 <= len(r.prompt) <= 9
+        assert 3 <= r.max_new <= 5
+        assert r.prompt.dtype == np.int32
+        assert r.prompt.min() >= 0 and r.prompt.max() < 17
+
+
+def test_fixed_lengths():
+    cfg = LoadConfig(num_requests=10, seed=0,
+                     prompt=LengthDist("fixed", 6, 6),
+                     output=LengthDist("fixed", 4, 4))
+    for r in generate_stream(cfg):
+        assert len(r.prompt) == 6 and r.max_new == 4
+
+
+def test_unknown_process_rejected():
+    with pytest.raises(ValueError, match="unknown arrival process"):
+        generate_stream(LoadConfig(process="fractal"))
+    with pytest.raises(ValueError, match="unknown length"):
+        LengthDist("zipf").sample(np.random.default_rng(0), 3)

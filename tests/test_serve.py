@@ -7,7 +7,8 @@ import pytest
 
 from repro.configs.base import get_config, reduced
 from repro.models.model import Model, RunConfig
-from repro.serve.engine import Engine, EngineConfig, throughput_stats
+from repro.serve.engine import (Engine, EngineConfig, real_token_count,
+                                throughput_stats)
 
 
 def _engine(arch="qwen2_7b", max_len=48, temp=0.0):
@@ -68,3 +69,41 @@ def test_throughput_stats():
     stats = throughput_stats(eng, np.zeros((2, 4), np.int32), 3)
     assert stats["tokens"] == 6
     assert stats["tok_per_s"] > 0
+
+
+def test_eos_freezes_finished_rows():
+    """Regression: once a row emits eos_id, every later position in that
+    row must be eos_id — not whatever the decoder keeps sampling into
+    the finished row."""
+    eng, _ = _engine()
+    prompts = np.arange(16, dtype=np.int32).reshape(2, 8)
+    free = eng.generate(prompts, 6)
+    eos = int(free[0, 8])                # row 0's first generated token
+    out = eng.generate(prompts, 6, eos_id=eos)
+    for row in out[:, 8:]:
+        hits = np.flatnonzero(row == eos)
+        if hits.size:
+            assert (row[hits[0]:] == eos).all()
+    # row 0 hits eos immediately, so it is fully frozen
+    assert (out[0, 8:] == eos).all()
+    # the eos run must agree with the free run up to each row's first eos
+    np.testing.assert_array_equal(out[0, :9], free[0, :9])
+
+
+def test_real_token_count():
+    out = np.array([[7, 7, 3, 9, 9, 9],       # eos=9 at gen position 1
+                    [7, 7, 4, 5, 6, 8]],      # never hits eos
+                   np.int32)
+    assert real_token_count(out, prompt_len=2) == 8
+    assert real_token_count(out, prompt_len=2, eos_id=9) == 2 + 4
+    assert real_token_count(out, prompt_len=2, eos_id=123) == 8
+
+
+def test_throughput_counts_only_real_tokens():
+    eng, _ = _engine()
+    prompts = np.arange(16, dtype=np.int32).reshape(2, 8)
+    eos = int(eng.generate(prompts, 1)[0, 8])
+    stats = throughput_stats(eng, prompts, 6, eos_id=eos)
+    full = throughput_stats(eng, prompts, 6)
+    assert full["tokens"] == 12
+    assert 0 < stats["tokens"] < full["tokens"]

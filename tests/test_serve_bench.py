@@ -1,0 +1,116 @@
+"""serve_bench: schema gate, deterministic virtual-clock runs, mesh path."""
+
+import copy
+import importlib.util
+import json
+import os
+
+import pytest
+
+_BENCH = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                      "serve_bench.py")
+
+
+def _load_bench():
+    spec = importlib.util.spec_from_file_location("serve_bench", _BENCH)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture(scope="module")
+def bench():
+    return _load_bench()
+
+
+@pytest.fixture(scope="module")
+def entry(bench):
+    """One tiny virtual-clock run shared across schema tests."""
+    return bench.run_config(
+        "qwen2_7b", slots=2, requests=6, rate=8.0, process="poisson",
+        seed=0, clock_kind="virtual", queue_limit=4, prompt_hi=6,
+        out_hi=4, with_plan=False, max_len=32)
+
+
+def test_entry_has_required_metrics(bench, entry):
+    doc = {"schema": "serve_bench/v1", "entries": [entry]}
+    bench.check_bench(doc)                   # raises on any violation
+    m = entry["metrics"]
+    assert m["tokens_per_s"] > 0
+    assert entry["requests_completed"] == 6
+    for h in ("ttft", "tpot", "e2e"):
+        for k in ("p50", "p90", "p99"):
+            assert m[h][k] >= 0
+    json.dumps(doc)
+
+
+def test_virtual_clock_runs_are_reproducible(bench, entry):
+    again = bench.run_config(
+        "qwen2_7b", slots=2, requests=6, rate=8.0, process="poisson",
+        seed=0, clock_kind="virtual", queue_limit=4, prompt_hi=6,
+        out_hi=4, with_plan=False, max_len=32)
+    assert again["stream_digest"] == entry["stream_digest"]
+    assert again["metrics"] == entry["metrics"]
+
+
+def test_check_bench_rejects_malformed(bench, entry):
+    with pytest.raises(ValueError, match="bad schema"):
+        bench.check_bench({"schema": "nope", "entries": [entry]})
+    with pytest.raises(ValueError, match="no entries"):
+        bench.check_bench({"schema": "serve_bench/v1", "entries": []})
+
+    broken = copy.deepcopy(entry)
+    del broken["metrics"]["tpot"]
+    with pytest.raises(ValueError, match="missing metric 'tpot'"):
+        bench.check_bench({"schema": "serve_bench/v1", "entries": [broken]})
+
+    broken = copy.deepcopy(entry)
+    broken["metrics"]["tokens_per_s"] = 0.0
+    with pytest.raises(ValueError, match="tokens_per_s"):
+        bench.check_bench({"schema": "serve_bench/v1", "entries": [broken]})
+
+    broken = copy.deepcopy(entry)
+    broken["requests_completed"] = 99
+    with pytest.raises(ValueError, match="request accounting"):
+        bench.check_bench({"schema": "serve_bench/v1", "entries": [broken]})
+
+
+def test_parse_mesh(bench):
+    assert bench.parse_mesh(None) is None
+    mesh = bench.parse_mesh("data=1")
+    assert dict(mesh.shape) == {"data": 1}
+    with pytest.raises(SystemExit, match="devices"):
+        bench.parse_mesh("data=4096")
+
+
+def test_run_config_under_mesh(bench):
+    mesh = bench.parse_mesh("data=1")
+    e = bench.run_config(
+        "qwen2_7b", slots=1, requests=3, rate=8.0, process="uniform",
+        seed=1, clock_kind="virtual", queue_limit=None, prompt_hi=5,
+        out_hi=3, with_plan=False, mesh=mesh, max_len=32)
+    assert e["mesh"] == {"data": 1}
+    assert e["requests_completed"] == 3
+
+
+@pytest.mark.slow
+def test_main_smoke_writes_valid_json(bench, tmp_path):
+    out = tmp_path / "BENCH_serve.json"
+    rc = bench.main(["--smoke", "--clock", "virtual", "--no-plan",
+                     "--configs", "qwen2_7b", "--out", str(out)])
+    assert rc == 0
+    doc = json.loads(out.read_text())
+    bench.check_bench(doc)
+    assert [e["config"] for e in doc["entries"]] == ["qwen2_7b"]
+
+
+@pytest.mark.slow
+def test_main_with_compile_plan(bench, tmp_path):
+    out = tmp_path / "BENCH_serve.json"
+    rc = bench.main(["--smoke", "--clock", "virtual",
+                     "--configs", "qwen2_7b", "--out", str(out)])
+    assert rc == 0
+    doc = json.loads(out.read_text())
+    e = doc["entries"][0]
+    assert e["compiled_count"] >= 1
+    assert any(r["status"] == "compiled" for r in e["compiled_blocks"])

@@ -1,0 +1,101 @@
+"""Metrics layer: histogram percentiles vs numpy, lifecycle accounting."""
+
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.serve.metrics import (ServeMetrics, StreamingHistogram,
+                                 VirtualClock, WallClock)
+
+
+@pytest.mark.parametrize("dist", ["lognormal", "uniform", "exponential"])
+@pytest.mark.parametrize("q", [50, 90, 99])
+def test_percentiles_match_numpy(dist, q):
+    rng = np.random.default_rng(42)
+    if dist == "lognormal":
+        xs = rng.lognormal(-2.0, 1.0, 20000)
+    elif dist == "uniform":
+        xs = rng.uniform(0.001, 2.0, 20000)
+    else:
+        xs = rng.exponential(0.05, 20000)
+    h = StreamingHistogram()
+    for x in xs:
+        h.record(x)
+    want = np.percentile(xs, q)
+    got = h.percentile(q)
+    # log-spaced buckets at 2% growth: ~2% relative resolution
+    assert abs(got - want) / want < 0.03, (dist, q, got, want)
+
+
+def test_exact_stats_and_extremes():
+    h = StreamingHistogram()
+    xs = [0.5, 1.0, 2.0, 4.0]
+    for x in xs:
+        h.record(x)
+    assert h.count == 4
+    assert h.min == 0.5 and h.max == 4.0
+    assert math.isclose(h.mean, sum(xs) / 4)
+    assert h.percentile(0) >= 0.5
+    assert h.percentile(100) == 4.0
+
+
+def test_out_of_range_values_clamped():
+    h = StreamingHistogram(lo=1e-3, hi=1e3)
+    h.record(1e-9)          # underflow bucket
+    h.record(1e9)           # overflow bucket
+    assert h.count == 2
+    assert h.percentile(100) == 1e9
+    s = h.summary()
+    assert s["count"] == 2 and s["min"] == 1e-9 and s["max"] == 1e9
+
+
+def test_empty_histogram_summary():
+    s = StreamingHistogram().summary()
+    assert s["count"] == 0 and s["p99"] == 0.0 and s["min"] == 0.0
+
+
+def test_lifecycle_with_virtual_clock():
+    clock = VirtualClock()
+    m = ServeMetrics(clock, slots=2)
+    m.on_submit(0, arrival=0.0)
+    clock.advance(3.0)
+    m.on_admit(0, prompt_len=5)
+    m.on_token(0)                       # first token at t=3 -> ttft 3
+    clock.advance(1.0)
+    m.on_token(0)                       # tpot 1
+    clock.advance(2.0)
+    m.on_token(0)                       # tpot 2
+    m.on_finish(0)                      # e2e 6
+    m.on_step(queue_depth=4, active_slots=1)
+    m.on_step(queue_depth=0, active_slots=2)
+
+    snap = m.snapshot()
+    assert snap["requests"] == {"submitted": 1, "completed": 1,
+                                "backpressure_events": 0}
+    assert snap["tokens"] == {"prefill": 5, "decode": 3}
+    assert abs(snap["ttft"]["p50"] - 3.0) / 3.0 < 0.03
+    assert snap["tpot"]["count"] == 2
+    assert abs(snap["e2e"]["max"] - 6.0) < 1e-9
+    assert snap["queue_depth"]["mean"] == 2.0       # (4 + 0) / 2
+    assert snap["slot_utilization"] == 0.75         # (1 + 2) / (2 * 2)
+    json.dumps(snap)                    # JSON-able
+
+
+def test_ttft_includes_queueing_from_arrival():
+    clock = VirtualClock()
+    m = ServeMetrics(clock)
+    clock.advance(10.0)
+    m.on_submit(1, arrival=2.0)         # arrived at t=2, submitted late
+    m.on_admit(1, 3)
+    m.on_token(1)
+    assert abs(m.ttft.max - 8.0) < 1e-9
+
+
+def test_wall_clock_monotone():
+    c = WallClock()
+    a = c.now()
+    c.advance(100.0)                    # no-op for wall clocks
+    b = c.now()
+    assert b >= a and b < 50.0
