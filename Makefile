@@ -17,6 +17,7 @@ docs:
 	$(PY) scripts/gen_rewrite_md.py > docs/REWRITE.md
 	$(PY) scripts/gen_raising_md.py > docs/RAISING.md
 	$(PY) scripts/gen_serving_md.py > docs/SERVING.md
+	$(PY) scripts/gen_sharing_md.py > docs/SHARING.md
 
 # CI gate: fail if any generated doc drifts from compiler output
 docs-check:
@@ -32,3 +33,5 @@ docs-check:
 	diff -u docs/RAISING.md /tmp/RAISING.md.gen
 	$(PY) scripts/gen_serving_md.py > /tmp/SERVING.md.gen
 	diff -u docs/SERVING.md /tmp/SERVING.md.gen
+	$(PY) scripts/gen_sharing_md.py > /tmp/SHARING.md.gen
+	diff -u docs/SHARING.md /tmp/SHARING.md.gen

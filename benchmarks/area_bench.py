@@ -1,0 +1,199 @@
+"""Area benchmark — structural footprint before/after resource sharing.
+
+For every built-in GEMM schedule and every serving kernel (``flash``,
+``decode``, ``ssd``), lower to HwIR, canonicalize, then apply the
+sharing pipeline (``outline-subcircuits`` + ``share-units``) in both
+modes — ``share`` (fold duplicate units behind muxes at ``serial=1``)
+and ``serialize`` (additionally time-multiplex wide virtual units onto
+narrow physical ones, trading cycles for area) — and record the
+before/after area with its breakdown (summed datapath lanes, register
+bits, RAM bytes, mux overhead, shared physical units, sub-module
+definitions) plus the modeled cycle cost of the serialization.
+
+Every "after" module is co-simulated against the LoopIR numpy oracle,
+so the JSON never records an area win from hardware that stopped
+computing the right answer.  Writes ``BENCH_area.json``
+(schema ``area_bench/v1``, gated by :func:`check_bench` — used by the
+CI share-smoke job; the gate also requires at least one entry with a
+>= 20% area reduction).
+
+  PYTHONPATH=src python benchmarks/area_bench.py            # full run
+  PYTHONPATH=src python benchmarks/area_bench.py --smoke    # CI seconds
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+from repro.core import dse, hw_ir, hw_sim, ir_text, machine_model
+from repro.core.machine_model import TPU_V5E
+from repro.core.passes import PassManager
+from repro.core.pipeline import SCHEDULES, compile_gemm
+from repro.core.reproc import kernel_graph
+from repro.core.rewrite import canonicalize
+from repro.core.sharing import SHARING_MODES, set_sharing
+
+GEMM_SIZE = 8
+REQUIRED_ENTRY_KEYS = ("name", "mode", "before", "after", "reduction_pct",
+                       "cosim")
+REQUIRED_SIDE_KEYS = ("area", "total_lanes", "reg_bits", "vmem_bytes",
+                      "mux_bits", "shared_units", "submodules", "fsm_states",
+                      "cycles")
+
+
+def _clone(mod: hw_ir.HwModule) -> hw_ir.HwModule:
+    """Fresh module via the textual round trip (sharing mutates)."""
+    return ir_text.parse_hw_module(ir_text.print_hw_module(mod))
+
+
+def _side(mod: hw_ir.HwModule) -> Dict:
+    cyc = machine_model.cycles(mod, TPU_V5E)
+    return {
+        "area": dse.area(mod),
+        "total_lanes": mod.total_lanes(),
+        "reg_bits": mod.register_bits(),
+        "vmem_bytes": mod.mem_bytes(),
+        "mux_bits": mod.mux_bits(),
+        "shared_units": mod.shared_unit_count(),
+        "submodules": len(mod.submodules),
+        "fsm_states": mod.fsm_state_count(),
+        "cycles": cyc.total,
+    }
+
+
+def bench_module(name: str, mod: hw_ir.HwModule, kernel, mode: str) -> Dict:
+    before = _clone(mod)
+    canonicalize(before)
+    after = _clone(before)
+    set_sharing(after, mode)
+
+    b, a = _side(before), _side(after)
+    rep = hw_sim.cosim(after, kernel, hw_sim.random_inputs(after),
+                       machine=TPU_V5E)
+    cyc_pct = abs(rep.cycle_ratio - 1.0) * 100.0
+    return {
+        "name": name,
+        "mode": mode,
+        "before": b,
+        "after": a,
+        "reduction_pct": round(100.0 * (b["area"] - a["area"])
+                               / max(1, b["area"]), 2),
+        "cosim": {
+            "ok": bool(rep.checked and rep.max_abs_err <= 1e-5
+                       and cyc_pct <= 10.0),
+            "max_abs_err": rep.max_abs_err,
+            "observed_cycles": rep.observed_cycles,
+            "modeled_cycles": rep.modeled_cycles,
+        },
+    }
+
+
+def _mlp_graph():
+    """Two identical matmul+relu layers — the repeated subcircuit that
+    ``outline-subcircuits`` folds into one instanced sub-module."""
+    from repro.core import frontend as fe
+
+    def mlp(x, w1, w2):
+        return fe.relu(fe.matmul(fe.relu(fe.matmul(x, w1)), w2))
+
+    return fe.trace(mlp, [fe.spec((8, 8))] * 3, name="mlp2")
+
+
+def modules(smoke: bool):
+    """Yield (name, HwModule, Kernel) for every subject."""
+    scheds = ("inner_flattened",) if smoke else SCHEDULES
+    for sched in scheds:
+        ck = compile_gemm(GEMM_SIZE, GEMM_SIZE, GEMM_SIZE, schedule=sched,
+                          want_jax=False, want_pallas=False)
+        yield f"gemm{GEMM_SIZE}/{sched}", ck.hw_module, ck.kernel
+    for kname in ("flash", "decode", "ssd"):
+        g = kernel_graph(kname)
+        kernel = PassManager.parse("lower").run(g).artifact
+        yield kname, hw_ir.lower_to_hw(kernel), kernel
+        if smoke:
+            return
+    # the outlining subject: two identical layers -> one sub-module def
+    g = _mlp_graph()
+    kernel = PassManager.parse(
+        "lower{tile_m=4,tile_n=4,tile_k=4}").run(g).artifact
+    yield "mlp2", hw_ir.lower_to_hw(kernel), kernel
+
+
+def run(smoke: bool = False) -> List[Dict]:
+    entries = []
+    for name, mod, kernel in modules(smoke):
+        for mode in SHARING_MODES:
+            if mode == "none":
+                continue
+            t0 = time.perf_counter()
+            e = bench_module(name, mod, kernel, mode)
+            e["bench_wall_s"] = round(time.perf_counter() - t0, 3)
+            entries.append(e)
+            print(f"[area_bench] {name:24s} {mode:9s} "
+                  f"area {e['before']['area']:>7} -> {e['after']['area']:>7} "
+                  f"({-e['reduction_pct']:+.1f}%) "
+                  f"cycles {e['before']['cycles']} -> {e['after']['cycles']} "
+                  f"cosim={'ok' if e['cosim']['ok'] else 'FAIL'}")
+    return entries
+
+
+def check_bench(doc: Dict) -> None:
+    """Schema gate for BENCH_area.json (used by CI share-smoke)."""
+    if doc.get("schema") != "area_bench/v1":
+        raise ValueError(f"bad schema {doc.get('schema')!r}")
+    entries = doc.get("entries")
+    if not entries:
+        raise ValueError("no entries")
+    for e in entries:
+        for k in REQUIRED_ENTRY_KEYS:
+            if k not in e:
+                raise ValueError(f"{e.get('name')}: missing key {k!r}")
+        for side in ("before", "after"):
+            for k in REQUIRED_SIDE_KEYS:
+                if k not in e[side]:
+                    raise ValueError(
+                        f"{e.get('name')}: {side} missing {k!r}")
+        if not e["cosim"]["ok"]:
+            raise ValueError(f"{e['name']}/{e['mode']}: cosim failed "
+                             f"(max|err|={e['cosim']['max_abs_err']:.3e}, "
+                             f"observed={e['cosim']['observed_cycles']} vs "
+                             f"modeled={e['cosim']['modeled_cycles']})")
+        # Pure time-multiplexed sharing (no outlining) must never grow
+        # area.  Outlined entries may legitimately trade datapath for
+        # control area (a sub-module definition is separate hardware, so
+        # its units can no longer be time-shared with the parent's) —
+        # for those the FSM must have shrunk instead.
+        if e["after"]["submodules"] == 0:
+            if e["after"]["area"] > e["before"]["area"]:
+                raise ValueError(
+                    f"{e['name']}/{e['mode']}: sharing grew area "
+                    f"{e['before']['area']} -> {e['after']['area']}")
+        elif e["after"]["fsm_states"] >= e["before"]["fsm_states"]:
+            raise ValueError(
+                f"{e['name']}/{e['mode']}: outlining neither shrank area "
+                f"nor the FSM ({e['before']['fsm_states']} -> "
+                f"{e['after']['fsm_states']} states)")
+    if not any(e["reduction_pct"] >= 20.0 for e in entries):
+        raise ValueError("no entry shows a >= 20% area reduction")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="one GEMM schedule + one kernel (CI seconds)")
+    ap.add_argument("--out", default="BENCH_area.json")
+    args = ap.parse_args(argv)
+
+    doc = {"schema": "area_bench/v1", "entries": run(smoke=args.smoke)}
+    check_bench(doc)
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    print(f"// json written to {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

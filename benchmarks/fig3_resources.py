@@ -36,6 +36,14 @@ def run() -> list:
                          float("nan"), r.fsm_states))
             rows.append((f"fig3/gemm{s}x{s}/{sched}/reg_bits",
                          float("nan"), r.reg_bits))
+            # area breakdown (summed datapath vs peak, mux overhead of
+            # time-multiplexed units, shared physical units)
+            rows.append((f"fig3/gemm{s}x{s}/{sched}/total_lanes",
+                         float("nan"), r.total_lanes))
+            rows.append((f"fig3/gemm{s}x{s}/{sched}/mux_bits",
+                         float("nan"), r.mux_bits))
+            rows.append((f"fig3/gemm{s}x{s}/{sched}/shared_units",
+                         float("nan"), r.shared_units))
     return rows
 
 

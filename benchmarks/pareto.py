@@ -4,7 +4,9 @@ paper's manual "simulate in Vivado, pick a schedule" loop.
 For each GEMM size, ``repro.core.dse.explore`` searches schedule
 programs (the paper's two points — nested and inner-flattened — plus
 the split+unroll replication ladder, ``@stream`` double-buffering, the
-memory-placement knob and the grid-mapped MXU tilings), prices every
+memory-placement knob, the resource-sharing families (``set-sharing``
+outlining + time-multiplexed unit bindings) and the grid-mapped MXU
+tilings), prices every
 candidate structurally off its lowered HwIR module, and reports the
 cycles × area frontier.  Frontier points at the smallest size are
 additionally co-simulated against the numpy oracle, mirroring the
@@ -42,6 +44,12 @@ def run() -> list:
             base = f"pareto/gemm{s}x{s}x{s}/{c.point.family}.{i}/{tag}"
             rows.append((f"{base}/cycles", float("nan"), c.cycles.total))
             rows.append((f"{base}/area", float("nan"), c.area))
+            rows.append((f"{base}/total_lanes", float("nan"),
+                         c.resources.total_lanes))
+            rows.append((f"{base}/mux_bits", float("nan"),
+                         c.resources.mux_bits))
+            rows.append((f"{base}/shared_units", float("nan"),
+                         c.resources.shared_units))
         rows.append((f"pareto/gemm{s}x{s}x{s}/frontier_points",
                      float("nan"), len(res.frontier)))
         rows.append((f"pareto/gemm{s}x{s}x{s}/cosim_ok", float("nan"),

@@ -85,26 +85,46 @@ def stream_dbuf_bytes(mod: HwModule) -> int:
     """
     total = 0
     for node, _, trail in mod.walk():
-        if isinstance(node, HwStep) and any(l.kind == "stream"
-                                            for l in trail):
-            for o in node.operands:
-                if mod.space_of(o.target) == MemSpace.HBM:
-                    total += 2 * o.elems * dtype_bytes(
-                        mod.storage(o.target).dtype)
-    return total
+        if not any(l.kind == "stream" for l in trail):
+            continue
+        if isinstance(node, HwStep):
+            operands = node.operands
+        elif isinstance(node, hw_ir.HwInstance):
+            operands = node.portmap     # the call's HBM traffic ping-pongs
+        else:
+            continue
+        for o in operands:
+            if mod.space_of(o.target) == MemSpace.HBM:
+                total += 2 * o.elems * dtype_bytes(
+                    mod.storage(o.target).dtype)
+    # a sub-module definition is one hardware instance however many call
+    # states reference it, so its double buffers are paid once
+    return total + sum(stream_dbuf_bytes(s) for s in mod.submodules)
+
+
+def _bram_area(mod: HwModule) -> int:
+    a = 0
+    for mm in mod.mems:
+        blocks = math.ceil(8 * mm.bytes / BRAM_BLOCK_BITS)
+        a += blocks * BRAM_BLOCK_BITS // BRAM_BIT_DISCOUNT
+    return a + sum(_bram_area(s) for s in mod.submodules)
 
 
 def area(mod: HwModule) -> int:
     """Composite spatial footprint of a module, in FF/LUT-equivalents.
 
-    lanes × :data:`LANE_AREA` (the DSP column) + architectural/counter/
-    state register bits (the FF column) + block-quantized RAM bits (the
-    BRAM column, discounted per bit) + stream double-buffer RAM.
+    summed lanes × :data:`LANE_AREA` over every declared unit (the DSP
+    column — *summed*, not peak, so sharing a unit across FSM states and
+    outlining a repeated subcircuit into one definition both shrink it)
+    + architectural/counter/state register bits (the FF column) +
+    input-mux overhead of time-multiplexed units + block-quantized RAM
+    bits (the BRAM column, discounted per bit) + stream double-buffer
+    RAM.  Sub-module definitions count once, however many call sites
+    instance them.
     """
-    a = mod.lane_count() * LANE_AREA + mod.register_bits()
-    for mm in mod.mems:
-        blocks = math.ceil(8 * mm.bytes / BRAM_BLOCK_BITS)
-        a += blocks * BRAM_BLOCK_BITS // BRAM_BIT_DISCOUNT
+    a = (mod.total_lanes() * LANE_AREA + mod.register_bits()
+         + mod.mux_bits())
+    a += _bram_area(mod)
     a += 8 * stream_dbuf_bytes(mod) // BRAM_BIT_DISCOUNT
     return a
 
@@ -374,6 +394,18 @@ def enumerate_points(graph: Graph,
                 "flat_stream", "lower,flatten-inner",
                 hw_pipeline=f"set-sequencer{{counter={outer},kind=stream}}"))
 
+    # -- resource sharing: outline repeats, time-multiplex units -------------
+    # "shared" trades nothing (bindings at serial=1 fold duplicate units
+    # behind muxes); "serialized" additionally lets wide units run on
+    # narrow hardware, trading cycles for the smallest area on the
+    # frontier.
+    pts.append(DsePoint("shared", "lower",
+                        hw_pipeline="canonicalize,set-sharing{mode=share}"))
+    if inner is not None:
+        pts.append(DsePoint(
+            "flat_serialized", "lower,flatten-inner",
+            hw_pipeline="canonicalize,set-sharing{mode=serialize}"))
+
     # -- grid-mapped MXU tilings (the TPU-native families) -------------------
     dims = [b.type.shape for b in k.params]
     flat_dims = sorted({d for shape in dims for d in shape})
@@ -399,7 +431,7 @@ def _default_cache_dir() -> str:
 
 def _cache_key(graph_text: str, machine: MachineModel,
                point: DsePoint, budget: ResourceBudget) -> str:
-    blob = "\x1f".join(("dse-v1", graph_text, repr(machine), point.spec,
+    blob = "\x1f".join(("dse-v2", graph_text, repr(machine), point.spec,
                         repr(budget)))
     return hashlib.sha256(blob.encode()).hexdigest()
 
@@ -484,7 +516,8 @@ def evaluate(graph: Graph, point: DsePoint, machine: MachineModel,
         res = ResourceReport(
             compute_lanes=hw.lane_count(), vmem_bytes=hw.mem_bytes(),
             vreg_tiles=0, fsm_states=hw.fsm_state_count(),
-            reg_bits=hw.register_bits())
+            reg_bits=hw.register_bits(), total_lanes=hw.total_lanes(),
+            mux_bits=hw.mux_bits(), shared_units=hw.shared_unit_count())
         over_capacity = True
     dbuf = stream_dbuf_bytes(hw)
     return DseCandidate(
@@ -587,7 +620,7 @@ class DseResult:
         lines = ["family,spec,cycles,compute,memory,control,lanes,"
                  "reg_bits,vmem_bytes,fsm_states,area,dbuf_bytes,"
                  "feasible,on_frontier,validated,observed_cycles,"
-                 "max_abs_err"]
+                 "max_abs_err,total_lanes,mux_bits,shared_units"]
         vmap = {v.point.spec: v for v in self.validations}
         for c in sorted(self.candidates, key=lambda c: c.key):
             v = vmap.get(c.point.spec)
@@ -599,7 +632,9 @@ class DseResult:
                 c.dbuf_bytes, int(c.feasible), int(c.on_frontier),
                 int(v is not None and v.ok),
                 v.observed_cycles if v else "",
-                f"{v.max_abs_err:.3e}" if v else "")))
+                f"{v.max_abs_err:.3e}" if v else "",
+                c.resources.total_lanes, c.resources.mux_bits,
+                c.resources.shared_units)))
         return "\n".join(lines) + "\n"
 
 

@@ -85,17 +85,25 @@ _MATMUL_OPS = ("matmul",)
 
 @dataclasses.dataclass(frozen=True)
 class HwPort:
-    """Module I/O backed by off-chip (HBM) memory — the AXI channel."""
+    """Module I/O.  Top-level module ports are backed by off-chip (HBM)
+    memory — the AXI channel.  Sub-module ports declare the ``space``
+    of the parent storage they are bound to at each instance site
+    (``hbm``/``vmem``/``vreg``), so pricing stays honest through the
+    hierarchy: a port backed by a parent register tile costs what a
+    register read costs, not an HBM burst."""
 
     name: str
     direction: str                  # "in" | "out" | "inout"
     dtype: str                      # element type, e.g. float32
     shape: Tuple[int, ...]          # backing array shape (elements)
+    space: str = "hbm"              # "hbm" | "vmem" | "vreg"
 
     def __post_init__(self):
         if self.direction not in ("in", "out", "inout"):
             raise ValueError(f"port {self.name}: bad direction "
                              f"{self.direction!r}")
+        if self.space not in ("hbm", "vmem", "vreg"):
+            raise ValueError(f"port {self.name}: bad space {self.space!r}")
 
     @property
     def elems(self) -> int:
@@ -167,6 +175,31 @@ class HwUnit:
     def lanes(self) -> int:
         """Spatial compute lanes of one copy (DSP analogue)."""
         return int(np.prod(self.geometry)) if self.geometry else 1
+
+
+@dataclasses.dataclass(frozen=True)
+class HwBinding:
+    """One row of the module's resource-binding table: control steps that
+    invoke the *virtual* unit ``virtual`` actually execute on the shared
+    physical unit ``unit``.
+
+    ``copies`` records the spatial replication the virtual unit was
+    lowered with; when the physical unit provides fewer copies, each
+    activation of the bound step group serializes into ``serial``
+    sequential rounds (``serial = ceil(copies / physical.copies)``) —
+    the time-multiplexing the ``share-units`` scheduler trades area for.
+    """
+
+    virtual: str                    # name steps reference
+    unit: str                       # physical HwUnit name
+    serial: int = 1                 # sequential rounds per activation
+    copies: int = 1                 # spatial copies of the virtual unit
+
+    def __post_init__(self):
+        if self.serial < 1:
+            raise ValueError(f"binding {self.virtual}: serial must be >= 1")
+        if self.copies < 1:
+            raise ValueError(f"binding {self.virtual}: copies must be >= 1")
 
 
 # --------------------------------------------------------------------------
@@ -250,8 +283,28 @@ class HwStep(HwCtrl):
     """
 
     op: str                         # "matmul" | "zero" | vpu op name
-    unit: str                       # HwUnit name
+    unit: str                       # HwUnit name (or a binding's virtual)
     operands: List[HwOperand]
+
+
+@dataclasses.dataclass
+class HwInstance(HwCtrl):
+    """One FSM state that invokes a sub-module definition.
+
+    ``portmap`` carries one operand per sub-module port, in port order:
+    the operand's target/index/tile name the region of *parent* storage
+    the port is bound to for this call site.  The operand role mirrors
+    the port direction (``in``→``read``, ``out``→``write``,
+    ``inout``→``acc``).  The sub-module runs its own control program to
+    completion before the parent FSM advances — a call, not a fork.
+    """
+
+    module: str                     # name in the parent's submodule table
+    portmap: List[HwOperand]
+
+    def rebuild(self, children: Sequence["HwCtrl"]) -> "HwInstance":
+        assert not children
+        return HwInstance(self.module, list(self.portmap))
 
 
 @dataclasses.dataclass
@@ -295,7 +348,12 @@ def _walk_ctrl(nodes: Sequence[HwCtrl], depth: int = 0, trail=()):
 
 @dataclasses.dataclass
 class HwModule:
-    """One hardware module: storage + datapath + control."""
+    """One hardware module: storage + datapath + control, plus (for the
+    hierarchical, shared-resource form) a sub-module definition table and
+    a resource-binding table.  ``submodules`` hold outlined subcircuit
+    definitions instanced from the control tree via :class:`HwInstance`;
+    ``bindings`` map virtual unit names (what steps reference) onto
+    shared physical :class:`HwUnit` declarations."""
 
     name: str
     ports: List[HwPort]
@@ -303,6 +361,8 @@ class HwModule:
     mems: List[HwMem]
     units: List[HwUnit]
     ctrl: List[HwCtrl]
+    submodules: List["HwModule"] = dataclasses.field(default_factory=list)
+    bindings: List[HwBinding] = dataclasses.field(default_factory=list)
 
     # ---- symbol tables -----------------------------------------------------
 
@@ -316,16 +376,34 @@ class HwModule:
     def space_of(self, name: str) -> MemSpace:
         d = self.storage(name)
         if isinstance(d, HwPort):
-            return MemSpace.HBM
+            return MemSpace(d.space)
         if isinstance(d, HwMem):
             return MemSpace.VMEM
         return MemSpace.VREG
 
+    def binding_of(self, name: str) -> Optional[HwBinding]:
+        """The binding-table row whose virtual name is ``name``, if any."""
+        for b in self.bindings:
+            if b.virtual == name:
+                return b
+        return None
+
     def unit(self, name: str) -> HwUnit:
+        """Resolve a step's unit reference — through the binding table
+        first (virtual → physical), then the declaration list."""
+        b = self.binding_of(name)
+        if b is not None:
+            name = b.unit
         for u in self.units:
             if u.name == name:
                 return u
         raise KeyError(f"no unit named {name!r} in module {self.name}")
+
+    def submodule(self, name: str) -> "HwModule":
+        for s in self.submodules:
+            if s.name == name:
+                return s
+        raise KeyError(f"no submodule named {name!r} in module {self.name}")
 
     # ---- rewrite-core structural protocol (see core/rewrite.py) -----------
 
@@ -335,7 +413,9 @@ class HwModule:
 
     def rebuild(self, children: Sequence[HwCtrl]) -> "HwModule":
         return HwModule(self.name, list(self.ports), list(self.regs),
-                        list(self.mems), list(self.units), list(children))
+                        list(self.mems), list(self.units), list(children),
+                        submodules=list(self.submodules),
+                        bindings=list(self.bindings))
 
     def is_equivalent(self, other) -> bool:
         """Structural equivalence: identical canonical textual form."""
@@ -359,18 +439,21 @@ class HwModule:
     # ---- structural accounting (what the Vivado report would count) --------
 
     def fsm_state_count(self) -> int:
-        """Number of states in the flattened control FSM.
+        """Number of states in the flattened control FSM (hierarchical
+        total: every sub-module definition owns its own controller,
+        counted once however many instances reference it).
 
-        Every :class:`HwStep` is one state.  ``fsm``/``stream`` loops add
-        one header state (test + counter increment); ``unroll``/``simd``
+        Every :class:`HwStep` is one state; an :class:`HwInstance` is one
+        call state in the parent.  ``fsm``/``stream`` loops add one
+        header state (test + counter increment); ``unroll``/``simd``
         bodies are spatial, so their body contributes its states once and
-        no header exists.  An idle/done state closes the machine.
+        no header exists.  An idle/done state closes each machine.
         """
 
         def go(nodes) -> int:
             n = 0
             for node in nodes:
-                if isinstance(node, HwStep):
+                if isinstance(node, (HwStep, HwInstance)):
                     n += 1
                 elif node.kind in ("fsm", "stream"):
                     n += 1 + go(node.body)
@@ -378,7 +461,8 @@ class HwModule:
                     n += go(node.body)
             return n
 
-        return 1 + go(self.ctrl)            # + idle/done
+        return (1 + go(self.ctrl)           # + idle/done
+                + sum(s.fsm_state_count() for s in self.submodules))
 
     def state_bits(self) -> int:
         return max(1, math.ceil(math.log2(max(2, self.fsm_state_count()))))
@@ -386,18 +470,59 @@ class HwModule:
     def register_bits(self) -> int:
         """Total architectural register bits: declared register banks plus
         the loop counters implied by sequenced loops plus the FSM state
-        register (the FF part of the FF/LUT report)."""
+        register (the FF part of the FF/LUT report); sub-module
+        definitions contribute their own bits once."""
         bits = sum(r.elems * r.width_bits for r in self.regs)
         bits += sum(l.counter_bits for l in self.loops()
                     if l.kind in ("fsm", "stream"))
-        return bits + self.state_bits()
+        return (bits + self.state_bits()
+                + sum(s.register_bits() for s in self.submodules))
 
     def mem_bytes(self) -> int:
-        return sum(mm.bytes for mm in self.mems)
+        return (sum(mm.bytes for mm in self.mems)
+                + sum(s.mem_bytes() for s in self.submodules))
 
     def lane_count(self) -> int:
         """Peak spatial compute lanes (the DSP column of Fig. 3)."""
-        return max((u.lanes * u.copies for u in self.units), default=0)
+        return max([u.lanes * u.copies for u in self.units]
+                   + [s.lane_count() for s in self.submodules] or [0])
+
+    def total_lanes(self) -> int:
+        """Summed spatial compute lanes over every declared unit plus
+        every sub-module definition counted once — the quantity resource
+        sharing actually shrinks (a shared physical unit is one decl,
+        however many virtual names bind to it)."""
+        return (sum(u.lanes * u.copies for u in self.units)
+                + sum(s.total_lanes() for s in self.submodules))
+
+    def _unit_users(self) -> Dict[str, int]:
+        """Physical unit name -> number of distinct users (direct step
+        references + binding-table rows) competing for its ports."""
+        unit_names = {u.name for u in self.units}
+        users = {n: 0 for n in unit_names}
+        for name in {s.unit for s in self.steps() if s.unit in unit_names}:
+            users[name] += 1
+        for b in self.bindings:
+            if b.unit in users:
+                users[b.unit] += 1
+        return users
+
+    def mux_bits(self) -> int:
+        """Input-select overhead of time-multiplexing: every user of a
+        physical unit beyond the first needs a lanes-wide 2:1 mux on each
+        of the unit's two operand buses.  Zero for unshared modules."""
+        users = self._unit_users()
+        bits = 0
+        for u in self.units:
+            bits += max(0, users[u.name] - 1) * u.lanes * u.copies * 2
+        return bits + sum(s.mux_bits() for s in self.submodules)
+
+    def shared_unit_count(self) -> int:
+        """Number of physical units that are time-multiplexed (referenced
+        through at least one binding-table row), hierarchy-wide."""
+        bound = {b.unit for b in self.bindings}
+        return (sum(1 for u in self.units if u.name in bound)
+                + sum(s.shared_unit_count() for s in self.submodules))
 
     # ---- verification ------------------------------------------------------
 
@@ -416,6 +541,59 @@ class HwModule:
                 raise ValueError(f"duplicate unit name {u.name!r} in module "
                                  f"{self.name}")
             unit_seen.add(u.name)
+        sub_seen: set = set()
+        for s in self.submodules:
+            if s.name in sub_seen:
+                raise ValueError(f"duplicate submodule name {s.name!r} in "
+                                 f"module {self.name}")
+            sub_seen.add(s.name)
+            s.verify()
+        bind_seen: set = set()
+        for b in self.bindings:
+            if b.virtual in bind_seen:
+                raise ValueError(f"duplicate binding for virtual unit "
+                                 f"{b.virtual!r} in module {self.name}")
+            if b.virtual in unit_seen:
+                raise ValueError(
+                    f"binding {b.virtual!r} shadows a unit declaration in "
+                    f"module {self.name} (virtual and physical names are "
+                    f"disjoint namespaces)")
+            bind_seen.add(b.virtual)
+            if b.unit not in unit_seen:
+                raise ValueError(
+                    f"binding {b.virtual} -> {b.unit}: no unit named "
+                    f"{b.unit!r} declared in module {self.name}")
+        def check_operand(opnd, scope):
+            d = self.storage(opnd.target)       # raises on unknown name
+            rank = len(d.shape)
+            if len(opnd.tile) != rank or len(opnd.index) != rank:
+                raise ValueError(
+                    f"operand {opnd.target}: index/tile rank "
+                    f"({len(opnd.index)}/{len(opnd.tile)}) does not "
+                    f"match storage rank {rank}")
+            for e in opnd.index:
+                for v, _ in e.coeffs:
+                    if v not in scope:
+                        raise ValueError(
+                            f"operand {opnd.target}: index uses "
+                            f"counter %{v} not bound by an "
+                            f"enclosing loop")
+            # bounds over the whole iteration box, sign-aware per
+            # coefficient (a mixed-sign index like i1+-1*k3 takes
+            # its extrema at different corners per term)
+            for e, t, dim in zip(opnd.index, opnd.tile, d.shape):
+                lo = hi = e.const
+                for v, s in e.coeffs:
+                    ext = scope[v] - 1
+                    lo += min(0, s * ext)
+                    hi += max(0, s * ext)
+                if lo * t < 0 or hi * t + t > dim:
+                    raise ValueError(
+                        f"operand {opnd.target}: tile range "
+                        f"[{lo * t}:{hi * t + t}] out of bounds "
+                        f"(dim {dim})")
+            return d
+
         counters = set()
         for node, _, trail in self.walk():
             if isinstance(node, HwLoop):
@@ -427,6 +605,43 @@ class HwModule:
                     raise ValueError(f"loop counter %{node.counter} shadows "
                                      f"a storage name")
                 counters.add(node.counter)
+            elif isinstance(node, HwInstance):
+                if node.module not in sub_seen:
+                    raise ValueError(
+                        f"instance references unknown submodule "
+                        f"@{node.module} in module {self.name}")
+                sub = self.submodule(node.module)
+                if len(node.portmap) != len(sub.ports):
+                    raise ValueError(
+                        f"instance @{node.module}: port map has "
+                        f"{len(node.portmap)} operands but the module "
+                        f"declares {len(sub.ports)} ports")
+                scope = {l.counter: l.trips for l in trail}
+                for opnd, port in zip(node.portmap, sub.ports):
+                    want = {"in": "read", "out": "write",
+                            "inout": "acc"}[port.direction]
+                    if opnd.role != want:
+                        raise ValueError(
+                            f"instance @{node.module} port {port.name} "
+                            f"({port.direction}) needs a {want} operand, "
+                            f"got {opnd.role}")
+                    d = check_operand(opnd, scope)
+                    if tuple(opnd.tile) != tuple(port.shape):
+                        raise ValueError(
+                            f"instance @{node.module} port {port.name}: "
+                            f"bound tile {tuple(opnd.tile)} does not match "
+                            f"port shape {tuple(port.shape)}")
+                    if d.dtype != port.dtype:
+                        raise ValueError(
+                            f"instance @{node.module} port {port.name}: "
+                            f"dtype {d.dtype} does not match port dtype "
+                            f"{port.dtype}")
+                    if self.space_of(opnd.target).value != port.space:
+                        raise ValueError(
+                            f"instance @{node.module} port {port.name}: "
+                            f"bound storage {opnd.target} lives in "
+                            f"{self.space_of(opnd.target).value}, port "
+                            f"declares {port.space}")
             elif isinstance(node, HwStep):
                 u = self.unit(node.unit)
                 if node.op in _MATMUL_OPS:
@@ -446,34 +661,7 @@ class HwModule:
                     raise ValueError(f"step {node.op} has no operands")
                 scope = {l.counter: l.trips for l in trail}
                 for opnd in node.operands:
-                    d = self.storage(opnd.target)   # raises on unknown name
-                    rank = len(d.shape)
-                    if len(opnd.tile) != rank or len(opnd.index) != rank:
-                        raise ValueError(
-                            f"operand {opnd.target}: index/tile rank "
-                            f"({len(opnd.index)}/{len(opnd.tile)}) does not "
-                            f"match storage rank {rank}")
-                    for e in opnd.index:
-                        for v, _ in e.coeffs:
-                            if v not in scope:
-                                raise ValueError(
-                                    f"operand {opnd.target}: index uses "
-                                    f"counter %{v} not bound by an "
-                                    f"enclosing loop")
-                    # bounds over the whole iteration box, sign-aware per
-                    # coefficient (a mixed-sign index like i1+-1*k3 takes
-                    # its extrema at different corners per term)
-                    for e, t, dim in zip(opnd.index, opnd.tile, d.shape):
-                        lo = hi = e.const
-                        for v, s in e.coeffs:
-                            ext = scope[v] - 1
-                            lo += min(0, s * ext)
-                            hi += max(0, s * ext)
-                        if lo * t < 0 or hi * t + t > dim:
-                            raise ValueError(
-                                f"operand {opnd.target}: tile range "
-                                f"[{lo * t}:{hi * t + t}] out of bounds "
-                                f"(dim {dim})")
+                    check_operand(opnd, scope)
 
     def __str__(self):
         from . import ir_text
@@ -680,6 +868,12 @@ def _flat_states(mod: HwModule) -> List[Tuple[str, str]]:
                 opnds = ", ".join(o.target for o in n.operands)
                 states.append((f"S_{prefix}{i}_{n.op.upper()}",
                                f"invoke {n.unit}.{n.op}({opnds})"))
+            elif isinstance(n, HwInstance):
+                opnds = ", ".join(o.target for o in n.portmap)
+                safe = "".join(c if c.isalnum() else "_" for c in n.module)
+                states.append((f"S_{prefix}{i}_CALL_{safe.upper()}",
+                               f"invoke submodule {n.module}({opnds}); "
+                               f"wait for its done"))
             elif n.kind in ("fsm", "stream"):
                 states.append((f"S_{prefix}{i}_{n.counter.upper()}",
                                f"{n.kind} loop %{n.counter}: test/increment "
@@ -701,19 +895,37 @@ def emit_verilog(mod: HwModule) -> str:
     synthesis-clean netlist — it is the textual artifact the paper's
     pipeline hands to Vivado, emitted so cycle/resource numbers can be
     audited against real structure.
+
+    Sub-module definitions are emitted as real Verilog modules of their
+    own (named ``{parent}_{sub}``) after the parent, each instantiated
+    once in the parent's datapath section — instead of the pre-sharing
+    form's N inlined copies.  Plain modules (no submodules, no bindings)
+    emit byte-identically to the flat form.
     """
     mod.verify()
+    texts = []
+
+    def collect(m: HwModule, name: str):
+        texts.append(_emit_one(m, name))
+        for sub in m.submodules:
+            collect(sub, f"{name}_{sub.name}")
+
+    collect(mod, mod.name)
+    return "\n\n".join(texts)
+
+
+def _emit_one(mod: HwModule, modname: str) -> str:
     states = _flat_states(mod)
     sbits = mod.state_bits()
     lines: List[str] = []
     w = lines.append
 
-    w(f"// stagecc HwIR — module {mod.name}")
+    w(f"// stagecc HwIR — module {modname}")
     w(f"// fsm: {mod.fsm_state_count()} states, "
       f"{mod.register_bits()} register bits, "
       f"{mod.mem_bytes()} RAM bytes, "
       f"{mod.lane_count()} datapath lanes")
-    w(f"module {mod.name} (")
+    w(f"module {modname} (")
     w("  input  wire clk,")
     w("  input  wire rst,")
     w("  input  wire start,")
@@ -722,7 +934,7 @@ def emit_verilog(mod: HwModule) -> str:
         shape = "x".join(str(d) for d in p.shape) or "1"
         addr_bits = max(1, (max(p.elems, 1) - 1).bit_length())
         addr = f"[{addr_bits - 1}:0]"
-        port_lines.append(f"  // {p.name}: {p.dtype}[{shape}] @hbm "
+        port_lines.append(f"  // {p.name}: {p.dtype}[{shape}] @{p.space} "
                           f"({p.direction})")
         if p.direction in ("in", "inout"):
             port_lines.append(f"  output reg  {addr} {p.name}_raddr")
@@ -768,6 +980,13 @@ def emit_verilog(mod: HwModule) -> str:
     w("  // ---- datapath units ----")
     for u in mod.units:
         geo = "x".join(str(g) for g in u.geometry) or "1"
+        bound = [b for b in mod.bindings if b.unit == u.name]
+        if bound:
+            shared = ", ".join(
+                b.virtual + (f" (serial={b.serial})" if b.serial > 1 else "")
+                for b in bound)
+            w(f"  // shared across FSM states — input mux selects among: "
+              f"{shared}")
         if u.copies > 1:
             w(f"  genvar {u.name}_g;")
             w(f"  generate for ({u.name}_g = 0; {u.name}_g < {u.copies}; "
@@ -776,6 +995,15 @@ def emit_verilog(mod: HwModule) -> str:
             w("  end endgenerate")
         else:
             w(f"  stagecc_{u.kind} #(.GEOMETRY(\"{geo}\")) {u.name} ();")
+    if mod.submodules:
+        w("")
+        w("  // ---- submodule instances (one def, N call-site states) ----")
+        for sub in mod.submodules:
+            calls = sum(1 for n, _, _ in mod.walk()
+                        if isinstance(n, HwInstance) and n.module == sub.name)
+            w(f"  {modname}_{sub.name} {sub.name}_i (.clk(clk), .rst(rst), "
+              f".start({sub.name}_start), .done({sub.name}_done));"
+              f"  // {calls} call site(s)")
     w("")
     w("  // ---- schedule ----")
     w("  always @(posedge clk) begin")

@@ -44,7 +44,7 @@ import numpy as np
 
 from . import backend_ref, machine_model
 from .backend_ref import _EWISE_NP, _np_dtype, reduce_tile_np, scan_tile_np
-from .hw_ir import HwLoop, HwModule, HwOperand, HwStep
+from .hw_ir import HwInstance, HwLoop, HwModule, HwOperand, HwStep
 from .loop_ir import Kernel
 from .machine_model import TPU_V5E, CycleReport, MachineModel
 
@@ -67,7 +67,7 @@ class TraceEvent:
     """One retired event of the simulated schedule."""
 
     cycle: int                       # observed cycle at retirement
-    kind: str                        # "step" | "loop" | "dma" | "done"
+    kind: str                        # "step" | "loop" | "dma" | "call" | "done"
     label: str                       # state-ish label (unit.op / %counter)
     detail: str = ""
     env: Tuple[Tuple[str, int], ...] = ()   # counter bindings, sorted
@@ -354,6 +354,34 @@ class _Sim:
                                               sub_lanes)
                         for k in acc:
                             acc[k] += body[k]
+            elif isinstance(n, HwInstance):
+                sub = self.mod.submodule(n.module)
+                # port map: each submodule port becomes a numpy *view* of
+                # the caller's storage slice, so writes land in place —
+                # exactly one physical memory, accessed through the
+                # instance's address map.  Local regs/mems reset per call.
+                submem: Dict[str, np.ndarray] = {}
+                for port, o in zip(sub.ports, n.portmap):
+                    submem[port.name] = self.mem[o.target][
+                        self._slices(o, env)]
+                for r in sub.regs:
+                    submem[r.name] = np.zeros(r.shape, _np_dtype(r.dtype))
+                for mm in sub.mems:
+                    submem[mm.name] = np.zeros(mm.shape, _np_dtype(mm.dtype))
+                saved = (self.mod, self.mem)
+                self.mod, self.mem = sub, submem
+                try:
+                    body = self.run_block(sub.ctrl, {}, lanes)
+                finally:
+                    self.mod, self.mem = saved
+                for k in acc:
+                    acc[k] += body[k]
+                # start/done handshake of the call-site FSM state
+                acc["control"] += self.m.call_overhead_cycles
+                self.clock += self.m.call_overhead_cycles
+                self.transitions += 1
+                opnds = ",".join(o.target for o in n.portmap)
+                self._emit("call", f"@{n.module}", env, f"({opnds})")
             else:
                 self.steps += 1
                 if self.steps > self.max_steps:
@@ -371,7 +399,11 @@ class _Sim:
                 c = machine_model.step_cycles(n, self.mod, self.m, lanes)
                 acc["compute"] += c["compute"]
                 acc["memory"] += c["memory"]
-                self.clock += c["compute"] + c["memory"]
+                # contention stall of a serialized shared-unit binding —
+                # same formula the analytic model charges
+                acc["control"] += c.get("control", 0.0)
+                self.clock += (c["compute"] + c["memory"]
+                               + c.get("control", 0.0))
                 self.transitions += 1
                 opnds = ",".join(o.target for o in n.operands)
                 self._emit("step", f"{n.unit}.{n.op}", env, f"({opnds})")

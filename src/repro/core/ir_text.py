@@ -53,8 +53,8 @@ import ast
 import re
 from typing import Dict, List, Optional, Tuple, Union
 
-from .hw_ir import (HwCtrl, HwLoop, HwMem, HwModule, HwOperand, HwPort, HwReg,
-                    HwStep, HwUnit, LOOP_CTRL_KINDS)
+from .hw_ir import (HwBinding, HwCtrl, HwInstance, HwLoop, HwMem, HwModule,
+                    HwOperand, HwPort, HwReg, HwStep, HwUnit, LOOP_CTRL_KINDS)
 from .loop_ir import (AffineExpr, Buffer, EwiseTile, FillTile, Kernel, Loop,
                       LoopKind, LoopVar, MatmulTile, MemSpace, ReduceTile,
                       ScanTile, Stmt, TileRef, ZeroTile)
@@ -175,6 +175,9 @@ def print_hw_ctrl(node: HwCtrl) -> List[str]:
     if isinstance(node, HwStep):
         opnds = ", ".join(print_hw_operand(o) for o in node.operands)
         return [f"step {node.op} {node.unit}({opnds})"]
+    if isinstance(node, HwInstance):
+        opnds = ", ".join(print_hw_operand(o) for o in node.portmap)
+        return [f"inst @{node.module}({opnds})"]
     if isinstance(node, HwLoop):
         lines = [f"loop %{node.counter} [{node.trips}] @{node.kind} {{"]
         for inner in node.body:
@@ -184,23 +187,38 @@ def print_hw_ctrl(node: HwCtrl) -> List[str]:
     raise TypeError(f"unknown control node {type(node).__name__}")
 
 
-def print_hw_module(m: HwModule) -> str:
-    lines = [f"stagecc.hw @{m.name} {{"]
+def _hw_body_lines(m: HwModule) -> List[str]:
+    """Declaration + ctrl lines of a module body, unindented — canonical
+    order: submodules, ports, regs, mems, units, binds, ctrl."""
+    lines: List[str] = []
+    for sub in m.submodules:
+        lines.append(f"module @{sub.name} {{")
+        lines.extend("  " + line for line in _hw_body_lines(sub))
+        lines.append("}")
     for p in m.ports:
-        lines.append(f"  port {p.direction} {p.name}: "
-                     f"{p.dtype}[{_print_shape(p.shape)}] @hbm")
+        lines.append(f"port {p.direction} {p.name}: "
+                     f"{p.dtype}[{_print_shape(p.shape)}] @{p.space}")
     for r in m.regs:
-        lines.append(f"  reg {r.name}: {r.dtype}[{_print_shape(r.shape)}]")
+        lines.append(f"reg {r.name}: {r.dtype}[{_print_shape(r.shape)}]")
     for mm in m.mems:
-        lines.append(f"  mem {mm.name}: "
+        lines.append(f"mem {mm.name}: "
                      f"{mm.dtype}[{_print_shape(mm.shape)}] @vmem")
     for u in m.units:
-        lines.append(f"  unit {u.name}: {u.kind}<{_print_shape(u.geometry)}>"
+        lines.append(f"unit {u.name}: {u.kind}<{_print_shape(u.geometry)}>"
                      f" x{u.copies}")
-    lines.append("  ctrl {")
+    for b in m.bindings:
+        lines.append(f"bind {b.virtual} -> {b.unit} "
+                     f"serial={b.serial} copies={b.copies}")
+    lines.append("ctrl {")
     for node in m.ctrl:
-        lines.extend("    " + line for line in print_hw_ctrl(node))
-    lines.append("  }")
+        lines.extend("  " + line for line in print_hw_ctrl(node))
+    lines.append("}")
+    return lines
+
+
+def print_hw_module(m: HwModule) -> str:
+    lines = [f"stagecc.hw @{m.name} {{"]
+    lines.extend("  " + line for line in _hw_body_lines(m))
     lines.append("}")
     return "\n".join(lines)
 
@@ -534,12 +552,16 @@ def parse_kernel(text: str) -> Kernel:
 # --------------------------------------------------------------------------
 
 _HW_RE = re.compile(r"^stagecc\.hw @([\w.\-]+) \{$")
-_HW_PORT_RE = re.compile(r"^port (inout|in|out) (\w+): (\w+)\[([\dx]*)\] @hbm$")
+_HW_SUBMODULE_RE = re.compile(r"^module @([\w.\-]+) \{$")
+_HW_PORT_RE = re.compile(r"^port (inout|in|out) (\w+): (\w+)\[([\dx]*)\]"
+                         r" @(hbm|vmem|vreg)$")
 _HW_REG_RE = re.compile(r"^reg (\w+): (\w+)\[([\dx]*)\]$")
 _HW_MEM_RE = re.compile(r"^mem (\w+): (\w+)\[([\dx]*)\] @vmem$")
 _HW_UNIT_RE = re.compile(r"^unit (\w+): (\w+)<([\dx]*)> x(\d+)$")
+_HW_BIND_RE = re.compile(r"^bind (\w+) -> (\w+) serial=(\d+) copies=(\d+)$")
 _HW_LOOP_RE = re.compile(r"^loop %(\w+) \[(\d+)\] @(\w+) \{$")
 _HW_STEP_RE = re.compile(r"^step ([\w.]+) (\w+)\((.*)\)$")
+_HW_INST_RE = re.compile(r"^inst @([\w.\-]+)\((.*)\)$")
 _HW_OPERAND_RE = re.compile(r"^(read|write|acc) (\w+)\[(.*) : ([\dx]*)\]$")
 
 
@@ -556,44 +578,9 @@ def parse_hw_module(text: str) -> HwModule:
     m = _HW_RE.match(head)
     if not m:
         raise IRParseError(lineno, head, "expected 'stagecc.hw @name {'")
-    mod = HwModule(name=m.group(1), ports=[], regs=[], mems=[], units=[],
-                   ctrl=[])
     pos = 1
 
-    # declarations, in canonical order (ports, regs, mems, units)
-    while pos < len(lines):
-        lineno, ln = lines[pos]
-        if (p := _HW_PORT_RE.match(ln)):
-            direction, name, dtype, shape = p.groups()
-            mod.ports.append(HwPort(name, direction, dtype,
-                                    _parse_shape(shape)))
-        elif (r := _HW_REG_RE.match(ln)):
-            name, dtype, shape = r.groups()
-            mod.regs.append(HwReg(name, dtype, _parse_shape(shape)))
-        elif (mm := _HW_MEM_RE.match(ln)):
-            name, dtype, shape = mm.groups()
-            mod.mems.append(HwMem(name, dtype, _parse_shape(shape)))
-        elif (u := _HW_UNIT_RE.match(ln)):
-            name, kind, geo, copies = u.groups()
-            try:
-                mod.units.append(HwUnit(name, kind, _parse_shape(geo),
-                                        int(copies)))
-            except ValueError as e:
-                raise IRParseError(lineno, ln, str(e))
-        else:
-            break
-        pos += 1
-
-    if pos >= len(lines) or lines[pos][1] != "ctrl {":
-        lineno, ln = lines[min(pos, len(lines) - 1)]
-        raise IRParseError(lineno, ln, "expected declaration or 'ctrl {'")
-    pos += 1
-
-    def parse_step(lineno: int, ln: str) -> HwStep:
-        s = _HW_STEP_RE.match(ln)
-        if not s:
-            raise IRParseError(lineno, ln, "expected 'step', 'loop', or '}'")
-        op, unit, args = s.groups()
+    def parse_operands(lineno: int, ln: str, args: str) -> List[HwOperand]:
         operands = []
         for part in _split_top(args):
             o = _HW_OPERAND_RE.match(part)
@@ -606,9 +593,17 @@ def parse_hw_module(text: str) -> HwModule:
                 raise IRParseError(lineno, ln, str(e))
             operands.append(HwOperand(role, target, _parse_shape(tile),
                                       index))
-        return HwStep(op, unit, operands)
+        return operands
 
-    def parse_block() -> List[HwCtrl]:
+    def parse_step(lineno: int, ln: str) -> HwStep:
+        s = _HW_STEP_RE.match(ln)
+        if not s:
+            raise IRParseError(lineno, ln,
+                               "expected 'step', 'inst', 'loop', or '}'")
+        op, unit, args = s.groups()
+        return HwStep(op, unit, parse_operands(lineno, ln, args))
+
+    def parse_block(mod: HwModule) -> List[HwCtrl]:
         nonlocal pos
         nodes: List[HwCtrl] = []
         while pos < len(lines):
@@ -623,17 +618,91 @@ def parse_hw_module(text: str) -> HwModule:
                     raise IRParseError(lineno, ln,
                                        f"unknown loop kind @{kind}")
                 pos += 1
-                nodes.append(HwLoop(counter, int(trips), kind, parse_block()))
+                nodes.append(HwLoop(counter, int(trips), kind,
+                                    parse_block(mod)))
+                continue
+            inst = _HW_INST_RE.match(ln)
+            if inst:
+                sub_name, args = inst.groups()
+                subs = {s.name: s for s in mod.submodules}
+                if sub_name not in subs:
+                    declared = ", ".join(sorted(subs)) or "none"
+                    raise IRParseError(
+                        lineno, ln,
+                        f"inst references unknown submodule @{sub_name} "
+                        f"(declared submodules: {declared})")
+                operands = parse_operands(lineno, ln, args)
+                want = len(subs[sub_name].ports)
+                if len(operands) != want:
+                    raise IRParseError(
+                        lineno, ln,
+                        f"inst @{sub_name}: port map has {len(operands)} "
+                        f"operands but module @{sub_name} declares "
+                        f"{want} ports")
+                nodes.append(HwInstance(sub_name, operands))
+                pos += 1
                 continue
             nodes.append(parse_step(lineno, ln))
             pos += 1
         raise IRParseError(lines[-1][0], lines[-1][1], "unclosed block")
 
-    mod.ctrl = parse_block()
-    if pos >= len(lines) or lines[pos][1] != "}":
-        lineno, ln = lines[min(pos, len(lines) - 1)]
-        raise IRParseError(lineno, ln, "expected closing '}' of module")
-    pos += 1
+    def parse_module_body(name: str) -> HwModule:
+        """Parse declarations (submodules, ports, regs, mems, units,
+        binds), then ``ctrl { ... }``, then the module's closing brace."""
+        nonlocal pos
+        mod = HwModule(name=name, ports=[], regs=[], mems=[], units=[],
+                       ctrl=[])
+        while pos < len(lines):
+            lineno, ln = lines[pos]
+            if (sm := _HW_SUBMODULE_RE.match(ln)):
+                pos += 1
+                mod.submodules.append(parse_module_body(sm.group(1)))
+                continue
+            if (p := _HW_PORT_RE.match(ln)):
+                direction, pname, dtype, shape, space = p.groups()
+                mod.ports.append(HwPort(pname, direction, dtype,
+                                        _parse_shape(shape), space))
+            elif (r := _HW_REG_RE.match(ln)):
+                rname, dtype, shape = r.groups()
+                mod.regs.append(HwReg(rname, dtype, _parse_shape(shape)))
+            elif (mm := _HW_MEM_RE.match(ln)):
+                mname, dtype, shape = mm.groups()
+                mod.mems.append(HwMem(mname, dtype, _parse_shape(shape)))
+            elif (u := _HW_UNIT_RE.match(ln)):
+                uname, kind, geo, copies = u.groups()
+                try:
+                    mod.units.append(HwUnit(uname, kind, _parse_shape(geo),
+                                            int(copies)))
+                except ValueError as e:
+                    raise IRParseError(lineno, ln, str(e))
+            elif (b := _HW_BIND_RE.match(ln)):
+                virt, phys, serial, copies = b.groups()
+                if not any(un.name == phys for un in mod.units):
+                    declared = ", ".join(un.name for un in mod.units) or "none"
+                    raise IRParseError(
+                        lineno, ln,
+                        f"bind {virt} -> {phys}: no unit named {phys!r} "
+                        f"declared (units: {declared})")
+                try:
+                    mod.bindings.append(HwBinding(virt, phys, int(serial),
+                                                  int(copies)))
+                except ValueError as e:
+                    raise IRParseError(lineno, ln, str(e))
+            else:
+                break
+            pos += 1
+        if pos >= len(lines) or lines[pos][1] != "ctrl {":
+            lineno, ln = lines[min(pos, len(lines) - 1)]
+            raise IRParseError(lineno, ln, "expected declaration or 'ctrl {'")
+        pos += 1
+        mod.ctrl = parse_block(mod)
+        if pos >= len(lines) or lines[pos][1] != "}":
+            lineno, ln = lines[min(pos, len(lines) - 1)]
+            raise IRParseError(lineno, ln, "expected closing '}' of module")
+        pos += 1
+        return mod
+
+    mod = parse_module_body(m.group(1))
     if pos < len(lines):
         lineno, ln = lines[pos]
         raise IRParseError(lineno, ln, "trailing input after module")

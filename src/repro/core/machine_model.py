@@ -69,6 +69,9 @@ class MachineModel:
     seq_loop_overhead_cycles: float = 5.46
     # One-off sequencer setup cost per loop.
     loop_setup_cycles: float = 1.0
+    # Handshake cost of invoking an outlined submodule (start/done edge
+    # plus the parent FSM's wait state).
+    call_overhead_cycles: float = 2.0
     # scalar MAC unit: compute (multiply+add+acc-writeback) and per-
     # operand-element load cost; the datapath is memory-PORT-limited, so
     # spatial unrolling does not speed these up (it removes only the
@@ -121,6 +124,9 @@ class ResourceReport:
     vreg_tiles: int          # live register tiles (FF/LUT analogue)
     fsm_states: int = 0      # flattened control-FSM states
     reg_bits: int = 0        # architectural + counter + state register bits
+    total_lanes: int = 0     # summed lanes x copies across every unit decl
+    mux_bits: int = 0        # input-mux overhead of time-multiplexed units
+    shared_units: int = 0    # physical units carrying >= 1 binding
 
     def __str__(self):
         return (f"resources(lanes={self.compute_lanes:,}, "
@@ -148,6 +154,22 @@ def _port_cycles(mod: HwModule, opnd: hw_ir.HwOperand, m: MachineModel,
     return 0.0      # register-file operands ride dedicated bypass paths
 
 
+def _binding_control(step: HwStep, mod: HwModule, m: MachineModel) -> float:
+    """Serialization cost of running ``step`` on a time-multiplexed unit.
+
+    A binding with ``serial > 1`` means the virtual unit's spatial copies
+    are replayed on fewer physical copies: each dynamic invocation pays
+    ``serial - 1`` extra sequencing transitions.  The charge is spread
+    over the virtual copies because the enclosing ``@unroll`` executes
+    the step once per copy — summed over the replication this totals
+    ``seq_loop_overhead_cycles * (serial - 1)`` per logical use.
+    """
+    b = mod.binding_of(step.unit)
+    if b is None or b.serial <= 1:
+        return 0.0
+    return m.seq_loop_overhead_cycles * (b.serial - 1) / max(1, b.copies)
+
+
 def step_cycles(step: HwStep, mod: HwModule, m: MachineModel,
                 simd_lanes: int) -> Dict[str, float]:
     """Cycles for one invocation of a datapath unit.
@@ -158,13 +180,18 @@ def step_cycles(step: HwStep, mod: HwModule, m: MachineModel,
     spatial flattening removes only control — the paper's measured
     behaviour (TABLE I gains of 1.34-1.43x for proportional hardware
     growth in Fig. 3).
+
+    Steps bound onto a shared physical unit with ``serial > 1`` carry an
+    extra ``"control"`` entry: the serialization stall is priced, not
+    hidden (identical formula in the simulator keeps cosim symmetric).
     """
     unit = mod.unit(step.unit)
+    ctrl = _binding_control(step, mod, m)
     if step.op == "zero":
         elems = step.operands[0].elems
         compute = max(1.0, elems / min(m.vpu_lanes,
                                        simd_lanes * max(1, elems)))
-        return {"compute": compute, "memory": 0.0}
+        return {"compute": compute, "memory": 0.0, "control": ctrl}
     if step.op == "matmul":
         dst, lhs, rhs = step.operands
         mt, kt = lhs.tile[-2], lhs.tile[-1]
@@ -176,18 +203,18 @@ def step_cycles(step: HwStep, mod: HwModule, m: MachineModel,
             compute = tiles * max(kt, m.mxu_dim)
             mem = sum(_port_cycles(mod, o, m, vreg_free=False)
                       for o in (lhs, rhs, dst))
-            return {"compute": compute, "memory": mem}
+            return {"compute": compute, "memory": mem, "control": ctrl}
         # scalar MAC unit (the paper's Calyx-generated GEMM datapath)
         macs = mt * nt * kt
         compute = m.scalar_mac_compute_cycles * macs / simd_lanes
         loads = (mt * kt + kt * nt) * m.scalar_load_cycles_per_elem
-        return {"compute": compute, "memory": loads}
+        return {"compute": compute, "memory": loads, "control": ctrl}
     # vpu elementwise
     elems = step.operands[0].elems
     compute = max(1.0, elems / min(m.vpu_lanes, simd_lanes))
     mem = sum(_port_cycles(mod, o, m, vreg_free=True)
               for o in step.operands)
-    return {"compute": compute, "memory": mem}
+    return {"compute": compute, "memory": mem, "control": ctrl}
 
 
 def cycles(x: HwLike, m: MachineModel = TPU_V5E) -> CycleReport:
@@ -205,31 +232,31 @@ def cycles(x: HwLike, m: MachineModel = TPU_V5E) -> CycleReport:
     """
     mod = _as_hw(x, m)
 
-    def go(nodes: List[HwCtrl], lanes: int) -> Dict[str, float]:
+    def go(nodes: List[HwCtrl], lanes: int, scope: HwModule) -> Dict[str, float]:
         acc = {"compute": 0.0, "memory": 0.0, "control": 0.0}
         for n in nodes:
             if isinstance(n, HwLoop):
                 if n.kind == "fsm":
-                    body = go(n.body, lanes)
+                    body = go(n.body, lanes, scope)
                     acc["compute"] += body["compute"] * n.trips
                     acc["memory"] += body["memory"] * n.trips
                     acc["control"] += (m.loop_setup_cycles +
                                        body["control"] * n.trips +
                                        m.seq_loop_overhead_cycles * n.trips)
                 elif n.kind == "unroll":
-                    body = go(n.body, lanes)
+                    body = go(n.body, lanes, scope)
                     acc["compute"] += body["compute"] * n.trips
                     acc["memory"] += body["memory"] * n.trips
                     acc["control"] += (m.loop_setup_cycles +
                                        body["control"] * n.trips)
                 elif n.kind == "simd":
-                    body = go(n.body, lanes * n.trips)
+                    body = go(n.body, lanes * n.trips, scope)
                     acc["compute"] += body["compute"] * n.trips
                     acc["memory"] += body["memory"] * n.trips
                     acc["control"] += (m.loop_setup_cycles +
                                        body["control"] * n.trips)
                 elif n.kind == "stream":
-                    body = go(n.body, lanes)
+                    body = go(n.body, lanes, scope)
                     # double-buffered: memory overlaps compute across steps
                     comp = body["compute"] * n.trips
                     mem = body["memory"] * n.trips
@@ -239,13 +266,20 @@ def cycles(x: HwLike, m: MachineModel = TPU_V5E) -> CycleReport:
                                        m.seq_loop_overhead_cycles * n.trips)
                 else:
                     raise ValueError(n.kind)
+            elif isinstance(n, hw_ir.HwInstance):
+                sub = scope.submodule(n.module)
+                body = go(sub.ctrl, lanes, sub)
+                acc["compute"] += body["compute"]
+                acc["memory"] += body["memory"]
+                acc["control"] += body["control"] + m.call_overhead_cycles
             else:
-                c = step_cycles(n, mod, m, lanes)
+                c = step_cycles(n, scope, m, lanes)
                 acc["compute"] += c["compute"]
                 acc["memory"] += c["memory"]
+                acc["control"] += c.get("control", 0.0)
         return acc
 
-    a = go(mod.ctrl, 1)
+    a = go(mod.ctrl, 1, mod)
     total = int(round(a["compute"] + a["memory"] + a["control"]))
     return CycleReport(total=total, compute=int(round(a["compute"])),
                        memory=int(round(a["memory"])),
@@ -270,18 +304,6 @@ def resources(x: HwLike, m: MachineModel = TPU_V5E) -> ResourceReport:
     register bank replicated with its datapath counts once per copy.
     """
     mod = _as_hw(x, m)
-    reg_names = {r.name for r in mod.regs}
-
-    max_vregs = 0
-    for step, _, trail in mod.walk():
-        if not isinstance(step, HwStep):
-            continue
-        rep = 1
-        for loop in trail:
-            if loop.kind in ("unroll", "simd"):
-                rep *= loop.trips
-        live = sum(1 for o in step.operands if o.target in reg_names)
-        max_vregs = max(max_vregs, live * rep)
 
     vmem = mod.mem_bytes()
     if vmem > m.vmem_capacity_bytes:
@@ -289,9 +311,35 @@ def resources(x: HwLike, m: MachineModel = TPU_V5E) -> ResourceReport:
             f"module {mod.name} RAM footprint {vmem} exceeds "
             f"capacity {m.vmem_capacity_bytes}")
     return ResourceReport(compute_lanes=mod.lane_count(), vmem_bytes=vmem,
-                          vreg_tiles=max_vregs,
+                          vreg_tiles=_max_vregs(mod),
                           fsm_states=mod.fsm_state_count(),
-                          reg_bits=mod.register_bits())
+                          reg_bits=mod.register_bits(),
+                          total_lanes=mod.total_lanes(),
+                          mux_bits=mod.mux_bits(),
+                          shared_units=mod.shared_unit_count())
+
+
+def _max_vregs(mod: HwModule) -> int:
+    """Peak live register tiles; instance port maps pin their operands
+    live across the whole call, and each submodule's own peak counts."""
+    reg_names = {r.name for r in mod.regs}
+    best = 0
+    for node, _, trail in mod.walk():
+        if isinstance(node, HwStep):
+            operands = node.operands
+        elif isinstance(node, hw_ir.HwInstance):
+            operands = node.portmap
+        else:
+            continue
+        rep = 1
+        for loop in trail:
+            if loop.kind in ("unroll", "simd"):
+                rep *= loop.trips
+        live = sum(1 for o in operands if o.target in reg_names)
+        best = max(best, live * rep)
+    for sub in mod.submodules:
+        best = max(best, _max_vregs(sub))
+    return best
 
 
 # --------------------------------------------------------------------------

@@ -401,6 +401,17 @@ def _run(args, out) -> int:
         print(f"error: --emit: invalid choice {args.emit!r}{hint} "
               f"(choose from {', '.join(_EMIT_LEVELS)})", file=sys.stderr)
         return 2
+    if args.kernel:
+        kname = args.kernel.partition(":")[0]
+        if kname not in _KERNEL_GRAPHS:
+            import difflib
+            close = difflib.get_close_matches(kname, _KERNEL_GRAPHS, n=1,
+                                              cutoff=0.5)
+            hint = f"; did you mean {close[0]!r}?" if close else ""
+            print(f"error: --kernel: unknown kernel {kname!r}{hint} "
+                  f"(choose from {', '.join(_KERNEL_GRAPHS)})",
+                  file=sys.stderr)
+            return 2
     if args.kernel and (args.gemm or args.input):
         other = "--gemm" if args.gemm else "--input"
         print(f"error: --kernel and {other} both name an input module; "

@@ -659,6 +659,11 @@ class DedupeUnits(Pattern):
         step = siblings[i]
         if not isinstance(step, HwStep) or not isinstance(root, HwModule):
             return None
+        if root.binding_of(step.unit) is not None:
+            # the step runs on a shared physical unit through the binding
+            # table; repointing it at a bare declaration would silently
+            # drop the binding's serialization accounting
+            return None
         mine = root.unit(step.unit)
         for u in root.units:
             if u.name == mine.name:
@@ -672,11 +677,32 @@ class DedupeUnits(Pattern):
 
 def _prune_unused_units(mod: HwModule) -> int:
     """Drop unit declarations no step references (counted in stats under
-    ``prune-unused-unit`` — they may predate the canonicalize run)."""
+    ``prune-unused-unit`` — they may predate the canonicalize run).
+
+    Binding-aware: a physical unit is live while any binding row still
+    points at it, and a binding row is live while any step references
+    its virtual name (dangling rows drop with their virtual).  Recurses
+    into sub-module definitions — each owns its own declarations.
+    """
+    removed = sum(_prune_unused_units(s) for s in mod.submodules)
     used = {s.unit for s in mod.steps()}
+    mod.bindings = [b for b in mod.bindings if b.virtual in used]
+    keep = used | {b.unit for b in mod.bindings}
     before = len(mod.units)
-    mod.units = [u for u in mod.units if u.name in used]
-    return before - len(mod.units)
+    mod.units = [u for u in mod.units if u.name in keep]
+    return removed + before - len(mod.units)
+
+
+def _prune_unused_modules(mod: HwModule) -> int:
+    """Drop sub-module definitions no instance references (counted under
+    ``prune-unused-module`` — rewrites may have orphaned a definition by
+    replacing its last call site)."""
+    removed = sum(_prune_unused_modules(s) for s in mod.submodules)
+    from .hw_ir import HwInstance
+    used = {n.module for n, _, _ in mod.walk() if isinstance(n, HwInstance)}
+    before = len(mod.submodules)
+    mod.submodules = [s for s in mod.submodules if s.name in used]
+    return removed + before - len(mod.submodules)
 
 
 # --------------------------------------------------------------------------
@@ -707,6 +733,10 @@ def canonicalize(art, max_iterations: int = 32) -> "art":
         if pruned:
             stats.count("prune-unused-unit", pruned)
             _publish(RewriteStats(hits={"prune-unused-unit": pruned}))
+        orphaned = _prune_unused_modules(art)
+        if orphaned:
+            stats.count("prune-unused-module", orphaned)
+            _publish(RewriteStats(hits={"prune-unused-module": orphaned}))
     if not stats.converged:
         raise RewriteError(
             f"canonicalize: no fixpoint after {stats.iterations} sweeps "

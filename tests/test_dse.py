@@ -101,10 +101,27 @@ def test_vectorize_legality_guards_reductions():
 # --------------------------------------------------------------------------
 
 
+def _assert_paper_points(res):
+    """Both paper points are priced; `inner_flattened` stays on the
+    frontier.  `nested` may legitimately be *dominated* now — but only
+    by a resource-sharing point (PR 9's `set-sharing` serializes the
+    flattened datapath down to nested's area at fewer cycles); anything
+    else knocking it off is a regression."""
+    fams = {c.point.family for c in res.frontier}
+    assert "inner_flattened" in fams
+    nested = next(c for c in res.candidates if c.point.family == "nested")
+    if not nested.on_frontier:
+        sharers = [c for c in res.candidates
+                   if c.point.family in ("shared", "flat_serialized")
+                   and dominates((c.cycles.total, c.area),
+                                 (nested.cycles.total, nested.area))]
+        assert sharers, f"nested dominated by a non-sharing family: {fams}"
+    return fams
+
+
 def test_frontier_8cube_contains_paper_points_plus_new():
     res = explore(_gemm(8), validate_top=64)
-    fams = {c.point.family for c in res.frontier}
-    assert "nested" in fams and "inner_flattened" in fams
+    fams = _assert_paper_points(res)
     new = fams - {"nested", "inner_flattened"}
     assert len(new) >= 3, f"expected >=3 new non-dominated families: {fams}"
     # every frontier point co-simulates: exact numerics, modeled cycles
@@ -123,8 +140,7 @@ def test_frontier_32cube_full_acceptance():
     co-simulates within 1e-5 of the numpy oracle and +-10% of its
     modeled cycles."""
     res = explore(_gemm(32), validate_top=64)
-    fams = {c.point.family for c in res.frontier}
-    assert "nested" in fams and "inner_flattened" in fams
+    fams = _assert_paper_points(res)
     assert len(fams - {"nested", "inner_flattened"}) >= 3
     assert len(res.validations) == len(res.frontier)
     for v in res.validations:

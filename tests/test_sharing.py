@@ -1,0 +1,326 @@
+"""Hierarchical HwIR: subcircuit outlining, the binding scheduler, the
+serialization cost contract, and the new textual syntax (PR 9)."""
+
+import io
+
+import pytest
+
+from repro.core import dse, frontend as fe, hw_ir, hw_sim, ir_text, \
+    machine_model, reproc
+from repro.core.hw_ir import (HwBinding, HwInstance, HwModule, HwPort,
+                              HwUnit)
+from repro.core.machine_model import TPU_V5E
+from repro.core.passes import PassManager
+from repro.core.pipeline import compile_gemm
+from repro.core.rewrite import canonicalize
+from repro.core.sharing import (SHARING_MODES, outline_subcircuits,
+                                set_sharing, share_units)
+
+
+def _clone(mod):
+    return ir_text.parse_hw_module(ir_text.print_hw_module(mod))
+
+
+def _mlp():
+    """Two identical matmul+relu layers — the canonical outlining
+    subject — plus its scheduled kernel (the cosim oracle)."""
+
+    def mlp(x, w1, w2):
+        return fe.relu(fe.matmul(fe.relu(fe.matmul(x, w1)), w2))
+
+    g = fe.trace(mlp, [fe.spec((8, 8))] * 3, name="mlp2")
+    k = PassManager.parse(
+        "lower{tile_m=4,tile_n=4,tile_k=4}").run(g).artifact
+    return hw_ir.lower_to_hw(k), k
+
+
+def _flat_gemm():
+    ck = compile_gemm(8, 8, 8, schedule="inner_flattened",
+                      want_jax=False, want_pallas=False)
+    return ck.hw_module, ck.kernel
+
+
+# --------------------------------------------------------------------------
+# outlining
+# --------------------------------------------------------------------------
+
+
+def test_outline_folds_repeated_layers_into_instanced_submodules():
+    mod, _ = _mlp()
+    outline_subcircuits(mod)
+    # both layers share one matmul-nest def and one relu-nest def
+    assert len(mod.submodules) == 2
+    insts = [n for n in mod.ctrl if isinstance(n, HwInstance)]
+    assert len(insts) == 4
+    by_def = {s.name: sum(1 for i in insts if i.module == s.name)
+              for s in mod.submodules}
+    assert all(n == 2 for n in by_def.values()), by_def
+    mod.verify()
+
+
+def test_outlined_module_cosims_exactly():
+    mod, kernel = _mlp()
+    set_sharing(mod, "share")
+    assert mod.submodules, "outlining found nothing to fold"
+    rep = hw_sim.cosim(mod, kernel, hw_sim.random_inputs(mod))
+    assert rep.checked and rep.max_abs_err <= 1e-5
+    assert abs(rep.cycle_ratio - 1.0) <= 0.10
+
+
+def test_outline_and_share_reach_fixpoint_in_one_rerun():
+    """The CI share-smoke contract: a second run of the full sharing
+    pipeline over its own printed output changes nothing (instances are
+    not re-outlined, bound units are not re-bound)."""
+    mod, _ = _mlp()
+    res = PassManager.parse(
+        "canonicalize,outline-subcircuits,share-units").run(mod)
+    once = ir_text.print_ir(res.artifact)
+    again = PassManager.parse(
+        "canonicalize,outline-subcircuits,share-units").run(
+        ir_text.parse_hw_module(once))
+    assert ir_text.print_ir(again.artifact) == once
+
+
+def test_hierarchical_text_roundtrips_at_fixpoint():
+    mod, _ = _mlp()
+    set_sharing(mod, "share")
+    text = ir_text.print_hw_module(mod)
+    assert ir_text.print_hw_module(ir_text.parse_hw_module(text)) == text
+
+
+def test_outlined_verilog_emits_defs_and_instantiations():
+    mod, _ = _mlp()
+    set_sharing(mod, "share")
+    v = hw_ir.emit_verilog(mod)
+    for sub in mod.submodules:
+        assert f"module mlp2_{sub.name}" in v      # one real def each
+        assert f"mlp2_{sub.name} " in v            # ...and instantiations
+
+
+# --------------------------------------------------------------------------
+# the binding scheduler + serialization pricing
+# --------------------------------------------------------------------------
+
+
+def test_share_folds_duplicate_units_behind_bindings():
+    mod, kernel = _flat_gemm()          # un-canonicalized: duplicate vpus
+    before = mod.total_lanes()
+    share_units(mod)
+    assert mod.bindings, "scheduler bound nothing"
+    assert mod.total_lanes() < before
+    assert mod.shared_unit_count() >= 1
+    # share mode is free: serial=1 bindings change zero cycles
+    assert all(b.serial == 1 for b in mod.bindings)
+    rep = hw_sim.cosim(mod, kernel, hw_sim.random_inputs(mod))
+    assert rep.checked and rep.max_abs_err <= 1e-5
+
+
+def test_serialize_trades_cycles_for_area_symmetrically():
+    mod, kernel = _flat_gemm()
+    base_cycles = machine_model.cycles(mod, TPU_V5E).total
+    base_area = dse.area(_canon_clone(mod))
+    set_sharing(mod, "serialize")
+    assert any(b.serial > 1 for b in mod.bindings)
+    priced = machine_model.cycles(mod, TPU_V5E).total
+    assert priced > base_cycles          # serialization is not free
+    assert dse.area(mod) < base_area     # ...but it is smaller
+    # the simulator charges the identical stall formula: cosim holds
+    rep = hw_sim.cosim(mod, kernel, hw_sim.random_inputs(mod))
+    assert rep.checked and rep.max_abs_err <= 1e-5
+    assert abs(rep.cycle_ratio - 1.0) <= 0.10
+
+
+def _canon_clone(mod):
+    c = _clone(mod)
+    canonicalize(c)
+    return c
+
+
+def test_serialize_shrinks_area_at_least_20pct_on_builtin_schedule():
+    """The PR's headline acceptance number, pinned."""
+    mod, _ = _flat_gemm()
+    before = dse.area(_canon_clone(mod))
+    after = _canon_clone(mod)
+    set_sharing(after, "serialize")
+    assert dse.area(after) <= 0.8 * before, \
+        (dse.area(after), before)
+
+
+@pytest.mark.parametrize("kname", ("flash", "decode", "ssd"))
+@pytest.mark.parametrize("mode", ("share", "serialize"))
+def test_serving_kernels_cosim_with_sharing_enabled(kname, mode):
+    g = reproc.kernel_graph(kname)
+    kernel = PassManager.parse("lower").run(g).artifact
+    mod = hw_ir.lower_to_hw(kernel)
+    set_sharing(mod, mode)
+    rep = hw_sim.cosim(mod, kernel, hw_sim.random_inputs(mod))
+    assert rep.checked and rep.max_abs_err <= 1e-5
+    assert abs(rep.cycle_ratio - 1.0) <= 0.10
+
+
+def test_set_sharing_rejects_unknown_mode_naming_choices():
+    mod, _ = _flat_gemm()
+    with pytest.raises(ValueError, match="none/share/serialize"):
+        set_sharing(mod, "everything")
+    assert set(SHARING_MODES) == {"none", "share", "serialize"}
+
+
+# --------------------------------------------------------------------------
+# interplay with canonicalization (regressions)
+# --------------------------------------------------------------------------
+
+
+def test_dedupe_units_refuses_bound_units():
+    """Canonicalize after serialize must keep the binding table — folding
+    a bound unit into an unbound twin would silently drop the
+    serialization accounting."""
+    mod, kernel = _flat_gemm()
+    set_sharing(mod, "serialize")
+    bindings = list(mod.bindings)
+    priced = machine_model.cycles(mod, TPU_V5E).total
+    canonicalize(mod)
+    assert mod.bindings == bindings
+    assert machine_model.cycles(mod, TPU_V5E).total == priced
+    rep = hw_sim.cosim(mod, kernel, hw_sim.random_inputs(mod))
+    assert rep.checked and rep.max_abs_err <= 1e-5
+
+
+def test_orphan_submodule_pruned_under_its_own_stat():
+    """A sub-module def with no remaining instance is dropped by
+    canonicalize — and the elimination is visible in the pattern stats,
+    never silent."""
+    mod, _ = _mlp()
+    outline_subcircuits(mod)
+    # orphan every instance of the first def
+    victim = mod.submodules[0].name
+    mod.ctrl = [n for n in mod.ctrl
+                if not (isinstance(n, HwInstance) and n.module == victim)]
+    res = PassManager.parse("canonicalize").run(mod)
+    stats = res.records[0].pattern_stats
+    assert stats.get("prune-unused-module", 0) >= 1, stats
+    assert victim not in {s.name for s in res.artifact.submodules}
+    res.artifact.verify()
+
+
+def test_prune_keeps_physical_units_reached_only_via_bindings():
+    mod, _ = _flat_gemm()
+    share_units(mod)
+    phys = {b.unit for b in mod.bindings}
+    canonicalize(mod)
+    assert phys <= {u.name for u in mod.units}
+    mod.verify()
+
+
+# --------------------------------------------------------------------------
+# textual diagnostics for the new syntax
+# --------------------------------------------------------------------------
+
+
+def _hw_lines(*body):
+    lines = ["stagecc.hw @m {"] + list(body) + ["}"]
+    return "\n".join(lines)
+
+
+def test_parse_inst_unknown_submodule_names_line():
+    text = _hw_lines(
+        "  port in a: float32[4] @hbm",
+        "  ctrl {",
+        "    inst @nosuch(read a[0 : 4])",
+        "  }")
+    with pytest.raises(ir_text.IRParseError) as ei:
+        ir_text.parse_hw_module(text)
+    assert "unknown submodule @nosuch" in str(ei.value)
+    assert ei.value.lineno == 4
+    assert "inst @nosuch" in str(ei.value)
+
+
+def test_parse_bind_to_undeclared_unit_names_line():
+    text = _hw_lines(
+        "  port in a: float32[4] @hbm",
+        "  unit u0: vpu<4> x1",
+        "  bind u9 -> phantom serial=2 copies=1",
+        "  ctrl {",
+        "    step relu u0(write a[0 : 4], read a[0 : 4])",
+        "  }")
+    with pytest.raises(ir_text.IRParseError) as ei:
+        ir_text.parse_hw_module(text)
+    assert "no unit named 'phantom'" in str(ei.value)
+    assert ei.value.lineno == 4
+    assert "bind u9 -> phantom" in str(ei.value)
+
+
+def test_parse_inst_portmap_arity_mismatch_names_line():
+    text = _hw_lines(
+        "  module @sub {",
+        "    port in p0: float32[4] @hbm",
+        "    port out p1: float32[4] @hbm",
+        "    unit u0: vpu<4> x1",
+        "    ctrl {",
+        "      step relu u0(write p1[0 : 4], read p0[0 : 4])",
+        "    }",
+        "  }",
+        "  port in a: float32[4] @hbm",
+        "  port out b: float32[4] @hbm",
+        "  ctrl {",
+        "    inst @sub(read a[0 : 4])",
+        "  }")
+    with pytest.raises(ir_text.IRParseError) as ei:
+        ir_text.parse_hw_module(text)
+    assert "port map has 1 operands" in str(ei.value)
+    assert "declares 2 ports" in str(ei.value)
+    assert ei.value.lineno == 13
+    assert "inst @sub" in str(ei.value)
+
+
+# --------------------------------------------------------------------------
+# verifier, pricing surface, DSE + CLI wiring
+# --------------------------------------------------------------------------
+
+
+def test_verify_rejects_binding_to_undeclared_unit():
+    mod = HwModule(name="m",
+                   ports=[HwPort("a", "in", "float32", (4,))],
+                   regs=[], mems=[],
+                   units=[HwUnit("u0", "vpu", (4,), 1)], ctrl=[])
+    mod.bindings.append(HwBinding("v0", "ghost", 2, 1))
+    with pytest.raises(ValueError, match="binding v0 -> ghost"):
+        mod.verify()
+
+
+def test_resource_report_carries_sharing_breakdown():
+    mod, _ = _flat_gemm()
+    set_sharing(mod, "serialize")
+    r = machine_model.resources(mod, TPU_V5E)
+    assert r.total_lanes == mod.total_lanes()
+    assert r.shared_units == mod.shared_unit_count() >= 1
+    assert r.mux_bits == mod.mux_bits()
+    # peak lane pressure (the budget/Fig.3 quantity) stays distinct
+    assert r.compute_lanes == mod.lane_count()
+
+
+def test_dse_space_contains_sharing_families_and_csv_breakdown(
+        tmp_path, monkeypatch):
+    monkeypatch.setenv("STAGECC_DSE_CACHE", str(tmp_path / "cache"))
+    g = reproc.quickstart_gemm(8, 8, 8, epilogue="none")
+    pts = dse.enumerate_points(g)
+    fams = {p.family for p in pts}
+    assert {"shared", "flat_serialized"} <= fams
+    for p in pts:
+        if p.family in ("shared", "flat_serialized"):
+            PassManager.parse(p.pipeline)
+            PassManager.parse(p.hw_pipeline)
+    res = dse.explore(g)
+    header = res.to_csv().splitlines()[0]
+    assert header.startswith("family,spec,cycles")
+    assert header.endswith("total_lanes,mux_bits,shared_units")
+    assert any(c.point.family == "flat_serialized" and c.feasible
+               for c in res.candidates)
+
+
+def test_cli_unknown_kernel_suggests_and_exits_2(capsys):
+    assert reproc.main(["--kernel", "flsh"], out=io.StringIO()) == 2
+    err = capsys.readouterr().err
+    assert "did you mean 'flash'?" in err
+    assert reproc.main(["--kernel", "zzz"], out=io.StringIO()) == 2
+    err = capsys.readouterr().err
+    assert "unknown kernel 'zzz'" in err and "flash, decode, ssd" in err
