@@ -2,7 +2,7 @@
 
 PY := PYTHONPATH=src python
 
-.PHONY: test docs docs-check
+.PHONY: test docs docs-check bench-check
 
 test:
 	$(PY) -m pytest -x -q
@@ -18,6 +18,11 @@ docs:
 	$(PY) scripts/gen_raising_md.py > docs/RAISING.md
 	$(PY) scripts/gen_serving_md.py > docs/SERVING.md
 	$(PY) scripts/gen_sharing_md.py > docs/SHARING.md
+	$(PY) scripts/gen_fabric_md.py > docs/FABRIC.md
+
+# CI gate: every committed BENCH_*.json must pass its schema's checker
+bench-check:
+	$(PY) scripts/check_bench.py
 
 # CI gate: fail if any generated doc drifts from compiler output
 docs-check:
@@ -35,3 +40,5 @@ docs-check:
 	diff -u docs/SERVING.md /tmp/SERVING.md.gen
 	$(PY) scripts/gen_sharing_md.py > /tmp/SHARING.md.gen
 	diff -u docs/SHARING.md /tmp/SHARING.md.gen
+	$(PY) scripts/gen_fabric_md.py > /tmp/FABRIC.md.gen
+	diff -u docs/FABRIC.md /tmp/FABRIC.md.gen

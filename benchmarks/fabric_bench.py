@@ -1,0 +1,235 @@
+"""Multi-kernel fabric benchmark — the throughput-under-contention
+trajectory.
+
+Schedules deterministic request streams (``repro.serve.loadgen``
+arrival processes scaled to device cycles) over fleets of compiled
+accelerators sharing one crossbar (``repro.core.fabric``), and records
+``BENCH_fabric.json``: requests/s of the **serialized single-kernel
+baseline** (back-to-back ``run_transaction`` — the seed behaviour) vs
+the **contention-aware overlap scheduler** (per-beat crossbar
+arbitration, DMA overlapped with compute), the fabric event-simulator
+cross-check of the machine model (pricing symmetry: the two must agree
+within 10%), crossbar utilization, per-slot queue-depth p50/p99, and
+the fleet-level DSE frontier (requests/s × total area) with its
+sim-validated top points.
+
+This is the first BENCH where the number must go *up*: every entry's
+overlap throughput must beat its serialized baseline by ≥1.3×, and CI
+(``fabric-smoke``) re-runs the smoke config twice under the virtual
+clock and byte-diffs the JSON.
+
+  PYTHONPATH=src python benchmarks/fabric_bench.py            # full fleets
+  PYTHONPATH=src python benchmarks/fabric_bench.py --smoke    # CI seconds
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Dict, List, Optional, Tuple
+
+#: every entry's overlap scheduler must beat serialized dispatch by this
+SPEEDUP_FLOOR = 1.3
+#: fabric machine model vs fabric event simulator agreement gate
+MODEL_SIM_TOL_PCT = 10.0
+
+
+def _fleets(smoke: bool):
+    """Yield (fleet name, {kernel: (graph, HwModule, Kernel)}, copies)."""
+    from repro.core import hw_ir
+    from repro.core.passes import PassManager
+    from repro.core.pipeline import compile_gemm
+    from repro.core.reproc import kernel_graph
+
+    ck = compile_gemm(8, 8, 8, schedule="nested",
+                      want_jax=False, want_pallas=False)
+    yield ("gemm8x2",
+           {"gemm8": (ck.graph, ck.hw_module, ck.kernel)},
+           {"gemm8": 2})
+    if smoke:
+        return
+    g = kernel_graph("flash")
+    kernel = PassManager.parse("lower").run(g).artifact
+    hw = hw_ir.lower_to_hw(kernel)
+    yield ("gemm8+flash",
+           {"gemm8": (ck.graph, ck.hw_module, ck.kernel),
+            "flash": (g, hw, kernel)},
+           {"gemm8": 1, "flash": 1})
+
+
+def _mixes(names: List[str], requests: int) -> List:
+    """The two traffic mixes per fleet: steady Poisson (even weights)
+    and bursty with load skewed onto the first kernel."""
+    from repro.core.fabric import TrafficMix
+
+    even = tuple((n, 1.0) for n in names)
+    skew = tuple((n, 3.0 if i == 0 else 1.0) for i, n in enumerate(names))
+    return [
+        TrafficMix("steady_poisson", even, num_requests=requests,
+                   process="poisson", rate=1.0, seed=0),
+        TrafficMix("bursty_skewed", skew, num_requests=requests,
+                   process="bursty", rate=1.0, seed=1),
+    ]
+
+
+def run_entry(fleet_name: str, parts: Dict, copies: Dict[str, int],
+              mix, *, with_dse: bool, dse_per_kernel: int,
+              seed: int) -> Dict:
+    from repro.core import machine_model
+    from repro.core.fabric import (explore_fleet, fabric_stream, make_fleet,
+                                   saturating_cycles_per_unit,
+                                   transaction_cost)
+    from repro.core.host_bridge import AXI4
+
+    fab = make_fleet({n: (hw, k) for n, (_, hw, k) in parts.items()},
+                     copies=copies, crossbar=AXI4)
+    # offer ~2x the whole fleet's capacity so the stream actually queues
+    w = dict(mix.weights)
+    wsum = sum(w.values())
+    mean_service = sum(
+        transaction_cost(hw, AXI4,
+                         machine_model.cycles(hw).total).total * w[n]
+        for n, (_, hw, _) in parts.items()) / wsum
+    mix = dataclasses.replace(mix, cycles_per_unit=saturating_cycles_per_unit(
+        mix, mean_service, load_factor=2.0 * len(fab.slots)))
+    stream = fabric_stream(mix)
+
+    ser = fab.model(stream, overlap=False)
+    ovl = fab.model(stream, overlap=True)
+    pri = dataclasses.replace(fab, policy="priority").model(
+        stream, overlap=True)
+    sim = fab.simulate(stream, overlap=True, seed=seed)
+    speedup = ovl.requests_per_s / ser.requests_per_s
+    dev_pct = (100.0 * abs(sim.requests_per_s - ovl.requests_per_s)
+               / max(ovl.requests_per_s, 1e-12))
+
+    entry = {
+        "fleet": fleet_name,
+        "mix": mix.describe(),
+        "slots": [s.name for s in fab.slots],
+        "requests": len(stream),
+        "serialized": ser.to_json(),
+        "overlap": ovl.to_json(),
+        "overlap_priority": pri.to_json(),
+        "overlap_sim": sim.to_json(),
+        "speedup": round(speedup, 4),
+        "model_vs_sim_pct": round(dev_pct, 4),
+    }
+    if with_dse:
+        graphs = {n: g for n, (g, _, _) in parts.items()}
+        res = explore_fleet(graphs, mix, per_kernel=dse_per_kernel,
+                            max_copies=2, validate_top=2, seed=seed)
+        entry["fleet_dse"] = {
+            "frontier": [{"fleet": c.spec(), "area": c.area,
+                          "requests_per_s": round(c.model_rps, 3),
+                          "speedup": round(c.speedup, 4)}
+                         for c in res.frontier],
+            "validations": [{"fleet": v.candidate.spec(),
+                             "sim_rps": round(v.sim_rps, 3),
+                             "model_rps": round(v.model_rps, 3),
+                             "deviation_pct": round(v.deviation_pct, 4),
+                             "ok": v.ok}
+                            for v in res.validations],
+        }
+    return entry
+
+
+def check_bench(doc: Dict) -> None:
+    """Schema gate for BENCH_fabric.json (used by CI fabric-smoke and
+    ``make bench-check``): structure, the ≥1.3× overlap-vs-serialized
+    floor, and the ≤10% model-vs-sim symmetry gate on every entry."""
+    if doc.get("schema") != "fabric_bench/v1":
+        raise ValueError(f"bad schema {doc.get('schema')!r}")
+    entries = doc.get("entries")
+    if not entries:
+        raise ValueError("no entries")
+    for e in entries:
+        tag = f"{e.get('fleet')}/{e.get('mix', {}).get('name')}"
+        for k in ("fleet", "mix", "slots", "serialized", "overlap",
+                  "overlap_sim", "speedup", "model_vs_sim_pct"):
+            if k not in e:
+                raise ValueError(f"{tag}: missing key {k!r}")
+        for side in ("serialized", "overlap", "overlap_sim"):
+            sec = e[side]
+            if sec["requests_per_s"] <= 0:
+                raise ValueError(f"{tag}: {side} requests_per_s <= 0")
+            if sec["completed"] != sec["requests"]:
+                raise ValueError(f"{tag}: {side} dropped requests "
+                                 f"({sec['completed']}/{sec['requests']})")
+            if not 0.0 <= sec["crossbar_utilization"] <= 1.0:
+                raise ValueError(f"{tag}: {side} crossbar utilization "
+                                 f"{sec['crossbar_utilization']} not in "
+                                 f"[0, 1]")
+            for s in sec["slots"]:
+                for k in ("p50", "p99"):
+                    if k not in s["queue_depth"]:
+                        raise ValueError(f"{tag}: slot {s['name']} "
+                                         f"queue_depth missing {k!r}")
+        if e["speedup"] < SPEEDUP_FLOOR:
+            raise ValueError(
+                f"{tag}: overlap speedup {e['speedup']}x is below the "
+                f"{SPEEDUP_FLOOR}x floor over serialized dispatch")
+        if e["model_vs_sim_pct"] > MODEL_SIM_TOL_PCT:
+            raise ValueError(
+                f"{tag}: event sim deviates {e['model_vs_sim_pct']}% "
+                f"from the machine model (> {MODEL_SIM_TOL_PCT}%)")
+        for v in e.get("fleet_dse", {}).get("validations", ()):
+            if not v["ok"] or v["deviation_pct"] > MODEL_SIM_TOL_PCT:
+                raise ValueError(
+                    f"{tag}: fleet frontier point {v['fleet']!r} failed "
+                    f"sim validation (dev {v['deviation_pct']}%)")
+
+
+def fmt_entry(e: Dict) -> str:
+    ovl = e["overlap"]
+    return (f"[fabric_bench] {e['fleet']:12s} {e['mix']['name']:15s} "
+            f"req/s {e['serialized']['requests_per_s']:>10,.0f} -> "
+            f"{ovl['requests_per_s']:>10,.0f} ({e['speedup']:.2f}x) "
+            f"xbar {ovl['crossbar_utilization']:.1%} "
+            f"sim dev {e['model_vs_sim_pct']:.2f}% "
+            f"frontier {len(e.get('fleet_dse', {}).get('frontier', []))}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-dse", action="store_true",
+                    help="skip the fleet-level DSE section")
+    ap.add_argument("--dse-per-kernel", type=int, default=2,
+                    help="frontier points taken per kernel in fleet DSE")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale reduced run for CI; drops "
+                         "wall-time fields so the JSON is byte-"
+                         "reproducible run to run")
+    ap.add_argument("--out", default="BENCH_fabric.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.requests = min(args.requests, 16)
+
+    entries: List[Dict] = []
+    for fleet_name, parts, copies in _fleets(args.smoke):
+        for mix in _mixes(list(parts), args.requests):
+            t0 = time.perf_counter()
+            entry = run_entry(fleet_name, parts, copies, mix,
+                              with_dse=not args.no_dse,
+                              dse_per_kernel=args.dse_per_kernel,
+                              seed=args.seed)
+            if not args.smoke:
+                entry["bench_wall_s"] = round(time.perf_counter() - t0, 3)
+            entries.append(entry)
+            print(fmt_entry(entry))
+
+    doc = {"schema": "fabric_bench/v1", "entries": entries}
+    check_bench(doc)
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    print(f"// json written to {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

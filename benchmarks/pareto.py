@@ -15,6 +15,12 @@ paper's RTL validation.
 Prints ``name,us_per_call,derived`` CSV rows (one ``cycles`` and one
 ``area`` row per candidate; ``frontier/<n>`` rows mark the frontier
 size) followed by an ASCII frontier plot in ``#``-comment lines.
+
+The **second axis** is the fleet frontier: ``fabric.explore_fleet``
+crosses the single-kernel frontier with copy counts behind a shared
+crossbar and ranks fleets on *throughput under contention*
+(requests/s against a saturating traffic mix) × total area — rows
+under ``pareto/fleet/...`` plus a second ASCII plot.
 Standalone: ``PYTHONPATH=src python -m benchmarks.pareto [--plot-only]``.
 """
 
@@ -58,6 +64,83 @@ def run() -> list:
     return rows
 
 
+#: fleet axis: copies searched per kernel and frontier points per kernel
+FLEET_SIZE = 8
+FLEET_MAX_COPIES = 2
+FLEET_PER_KERNEL = 3
+
+
+def explore_fleet_size(s: int):
+    import dataclasses
+
+    from repro.core import fabric
+    from repro.core.host_bridge import AXI4
+    from repro.core.machine_model import TPU_V5E
+    from repro.core.pipeline import compile_gemm
+
+    ck = compile_gemm(s, s, s, schedule="nested",
+                      want_jax=False, want_pallas=False)
+    name = f"gemm{s}"
+    mix = fabric.TrafficMix("steady", ((name, 1.0),),
+                            num_requests=8, process="poisson",
+                            rate=1.0, seed=0)
+    service = fabric.transaction_cost(ck.hw_module, AXI4,
+                                      ck.cycles.total).total
+    mix = dataclasses.replace(
+        mix, cycles_per_unit=fabric.saturating_cycles_per_unit(
+            mix, service, load_factor=2.0 * FLEET_MAX_COPIES))
+    return fabric.explore_fleet({name: ck.graph}, mix, machine=TPU_V5E,
+                                per_kernel=FLEET_PER_KERNEL,
+                                max_copies=FLEET_MAX_COPIES,
+                                validate_top=2)
+
+
+def run_fleet() -> list:
+    rows = []
+    res = explore_fleet_size(FLEET_SIZE)
+    s = FLEET_SIZE
+    for i, c in enumerate(res.frontier):
+        base = f"pareto/fleet/gemm{s}x{s}x{s}/{c.spec()}/frontier"
+        rows.append((f"{base}/requests_per_s", float("nan"),
+                     round(c.model_rps, 1)))
+        rows.append((f"{base}/area", float("nan"), c.area))
+        rows.append((f"{base}/speedup_vs_serialized", float("nan"),
+                     round(c.speedup, 3)))
+    rows.append((f"pareto/fleet/gemm{s}x{s}x{s}/frontier_points",
+                 float("nan"), len(res.frontier)))
+    rows.append((f"pareto/fleet/gemm{s}x{s}x{s}/sim_validated_ok",
+                 float("nan"),
+                 int(all(v.ok for v in res.validations))
+                 if res.validations else float("nan")))
+    return rows
+
+
+def ascii_fleet_plot(res, width: int = 64, height: int = 12) -> str:
+    """Scatter of requests/s (x) vs area (y, log) over ALL priced
+    fleets; '*' = on the throughput-under-contention × area frontier."""
+    import math
+
+    pts = [(c.model_rps, c.area, c.on_frontier) for c in res.candidates]
+    if not pts:
+        return "# (no fleets)"
+    xs = [p[0] for p in pts]
+    ly = [math.log10(max(p[1], 1)) for p in pts]
+    x0, x1 = min(xs), max(xs) or 1.0
+    y0, y1 = min(ly), max(ly) or 1.0
+    grid = [[" "] * width for _ in range(height)]
+    for (rps, ar, front), gy in zip(pts, ly):
+        col = int((rps - x0) / max(x1 - x0, 1e-9) * (width - 1))
+        row = int((gy - y0) / max(y1 - y0, 1e-9) * (height - 1))
+        grid[height - 1 - row][col] = "*" if front else "o"
+    lines = ["# fleet: requests/s under contention (x) vs total area "
+             "(y, log); '*' frontier / 'o' dominated"]
+    for r in grid:
+        lines.append("# |" + "".join(r) + "|")
+    lines.append(f"# +{'-' * width}+  x: {x0:,.0f}..{x1:,.0f} req/s, "
+                 f"y: 10^{y0:.1f}..10^{y1:.1f} area")
+    return "\n".join(lines)
+
+
 def ascii_plot(res: dse.DseResult, width: int = 64, height: int = 16) -> str:
     """Log-log scatter of cycles (x) vs area (y); '*' = frontier."""
     import math
@@ -89,7 +172,10 @@ def main():
         print("name,us_per_call,derived")
         for name, us, derived in run():
             print(f"{name},{us:.2f},{derived}")
+        for name, us, derived in run_fleet():
+            print(f"{name},{us:.2f},{derived}")
     print(ascii_plot(explore_size(SIZES[-1])))
+    print(ascii_fleet_plot(explore_fleet_size(FLEET_SIZE)))
 
 
 if __name__ == "__main__":

@@ -42,6 +42,12 @@ generated for loops whose written tiles all depend on the loop variable
 (SIMD lanes must write disjoint tiles; a reduction loop like GEMM's K
 is *not* vectorizable, while it *is* unrollable — the paper's
 flattening chains spatial MACs).
+
+Beyond one kernel in isolation, :func:`explore_fleet` (implemented in
+``core/fabric.py``, re-exported here) composes the per-kernel frontiers
+this module computes into *fleet* candidates — which kernels get area,
+how many copies of each — priced under crossbar contention against a
+traffic mix and ranked on a throughput × total-area frontier.
 """
 
 from __future__ import annotations
@@ -771,3 +777,16 @@ def explore(graph: Graph, machine: MachineModel = TPU_V5E,
     return DseResult(graph_name=graph.name, machine=machine, budget=budget,
                      candidates=priced, errors=errors,
                      validations=validations, deduped=deduped)
+
+
+def explore_fleet(graphs, mix, **kwargs):
+    """Fleet-level DSE: optimize N kernels sharing one crossbar against
+    a traffic mix under a total :class:`ResourceBudget` — per-kernel
+    frontiers from :func:`explore`, fleets priced by the fabric machine
+    model under contention, ranked on requests/s × total area, top
+    points validated by the fabric event simulator.  Implemented in
+    :mod:`repro.core.fabric`; see
+    :func:`repro.core.fabric.explore_fleet` for the parameters."""
+    from .fabric import explore_fleet as _explore_fleet
+
+    return _explore_fleet(graphs, mix, **kwargs)

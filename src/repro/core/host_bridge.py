@@ -70,6 +70,27 @@ AXI4 = Crossbar("axi4", data_width_bits=128, latency_cycles=24)
 AXI4_LITE = Crossbar("axi4_lite", data_width_bits=32, latency_cycles=8,
                      csr_access_cycles=8)
 
+#: named crossbar configurations the CLI/fabric accept by name
+CROSSBAR_PRESETS: Dict[str, Crossbar] = {
+    "axi4": AXI4,
+    "axi4_lite": AXI4_LITE,
+}
+
+
+def crossbar_preset(name: str) -> Crossbar:
+    """Look up a crossbar preset (case-insensitive).  Raises ``KeyError``
+    naming the valid presets on a miss; the CLI adds its did-you-mean
+    hint on top."""
+    key = name.strip().lower()
+    if key not in CROSSBAR_PRESETS:
+        raise KeyError(f"unknown crossbar preset {name!r} "
+                       f"(choose from {', '.join(CROSSBAR_PRESETS)})")
+    return CROSSBAR_PRESETS[key]
+
+
+class PollTimeout(RuntimeError):
+    """The host gave up polling STATUS before the device reported done."""
+
 
 # --------------------------------------------------------------------------
 # CSR block
@@ -163,10 +184,37 @@ class TransactionReport:
         return "\n".join(lines)
 
 
+def _validate_inputs(mod: HwModule, inputs: Sequence[np.ndarray]) -> None:
+    """Host-side argument checking against the port declarations — the
+    crossbar wrapper rejects a malformed DMA descriptor instead of
+    silently casting or truncating.  Fewer inputs than ``in`` ports is
+    legal (unbound HBM temporaries read zeros, as in ``hw_sim``)."""
+    in_ports = [p for p in mod.ports if p.direction == "in"]
+    if len(inputs) > len(in_ports):
+        raise ValueError(
+            f"module {mod.name} has {len(in_ports)} input port(s) but "
+            f"{len(inputs)} input buffer(s) were given")
+    for p, a in zip(in_ports, inputs):
+        a = np.asarray(a)
+        if tuple(a.shape) != tuple(p.shape):
+            raise ValueError(
+                f"module {mod.name}, port {p.name}: input shape "
+                f"{tuple(a.shape)} != declared {tuple(p.shape)}")
+        # the carried numpy dtype (bfloat16 rides in float32, as in the
+        # oracle and the simulator)
+        want = np.dtype(hw_sim._np_dtype(p.dtype))
+        if a.dtype != want:
+            raise ValueError(
+                f"module {mod.name}, port {p.name}: input dtype "
+                f"{a.dtype} != declared {want} (the DMA engine moves "
+                f"raw beats; cast on the host first)")
+
+
 def run_transaction(mod: HwModule, inputs: Sequence[np.ndarray],
                     machine: MachineModel = TPU_V5E,
                     crossbar: Crossbar = AXI4,
                     poll_interval: int = 64,
+                    poll_timeout: Optional[int] = None,
                     trace: bool = False,
                     sim: Optional[hw_sim.SimReport] = None
                     ) -> TransactionReport:
@@ -187,10 +235,18 @@ def run_transaction(mod: HwModule, inputs: Sequence[np.ndarray],
     6. **dma_out** — every write-channel (``out``/``inout``) port
        streams back to the host.
 
+    ``poll_timeout`` caps the number of STATUS polls the host issues:
+    if the device run would need more, the transaction raises
+    :class:`PollTimeout` instead of spinning — the watchdog every real
+    host driver arms against a wedged device.
+
     Pass ``sim`` to reuse an already-computed device run (e.g. from a
     preceding co-simulation of the same module and inputs) instead of
     simulating a second time.
     """
+    _validate_inputs(mod, inputs)
+    if poll_timeout is not None and poll_timeout < 1:
+        raise ValueError(f"poll_timeout must be >= 1, got {poll_timeout}")
     fields = {f.name: f for f in csr_map(mod)}
     csr_trace: List[Tuple[int, str, str, int]] = []
     phases: List[Phase] = []
@@ -244,6 +300,12 @@ def run_transaction(mod: HwModule, inputs: Sequence[np.ndarray],
     # interval apart (trace-stamped at their real issue cycles); their
     # access cost is charged serially to the host here.
     polls = max(1, math.ceil(rep.cycles.total / max(1, poll_interval)))
+    if poll_timeout is not None and polls > poll_timeout:
+        raise PollTimeout(
+            f"module {mod.name}: device needs {rep.cycles.total:,} cycles "
+            f"(≥ {polls} polls at interval {poll_interval}) but the host "
+            f"gives up after {poll_timeout} poll(s); raise poll_timeout "
+            f"or poll_interval")
     wait = polls * poll_interval - rep.cycles.total   # residual quantisation
     for i in range(min(polls, 4)):                    # keep the trace short
         csr_trace.append((device_start + (i + 1) * poll_interval,

@@ -200,13 +200,13 @@ def simulate_report(args, art) -> str:
         lines.append("//   (no LoopIR stage in scope: numeric check "
                      "against the numpy oracle skipped)")
     if args.simulate == "host":
-        xbar = host_bridge.Crossbar(
-            "axi4", data_width_bits=args.crossbar_width,
-            latency_cycles=args.crossbar_latency)
+        xbar = _crossbar_from(args)
         # reuse the co-sim's device run rather than simulating twice
         tr = host_bridge.run_transaction(hw, inputs, crossbar=xbar,
                                          sim=rep.sim)
         lines.extend("// " + ln for ln in tr.summary().splitlines())
+    if args.simulate == "fabric":
+        lines.extend("// " + ln for ln in fabric_report(args, hw, kernel))
     if args.trace:
         lines.append(rep.sim.format_trace())
     if args.vcd:
@@ -214,6 +214,56 @@ def simulate_report(args, art) -> str:
             f.write(rep.sim.vcd())
         lines.append(f"// vcd dump written to {args.vcd}")
     return "\n".join(lines)
+
+
+def _crossbar_from(args) -> host_bridge.Crossbar:
+    """The crossbar the --simulate host/fabric sections price over:
+    a named preset (--crossbar) or the latency/width flag pair."""
+    if args.crossbar:
+        return host_bridge.crossbar_preset(args.crossbar)
+    return host_bridge.Crossbar(
+        "axi4", data_width_bits=args.crossbar_width,
+        latency_cycles=args.crossbar_latency)
+
+
+def fabric_report(args, hw, kernel) -> List[str]:
+    """The ``--simulate fabric`` section: schedule a saturating request
+    stream over N copies of the module behind one shared crossbar and
+    print serialized-baseline vs contention-aware-overlap pricing, from
+    both the fabric machine model and the fabric event simulator."""
+    import dataclasses as _dc
+
+    from . import fabric as fabric_mod
+
+    xbar = _crossbar_from(args)
+    fab = fabric_mod.make_fleet(
+        {hw.name: (hw, kernel)}, copies={hw.name: args.fabric_slots},
+        crossbar=xbar, policy=args.fabric_policy)
+    base = fabric_mod.transaction_cost(
+        hw, xbar, machine_model.cycles(hw).total).total
+    mix = fabric_mod.TrafficMix(
+        "cli", ((hw.name, 1.0),), num_requests=args.fabric_requests,
+        rate=1.0, seed=args.seed)
+    # offer ~2x the whole fleet's capacity so contention is visible
+    mix = _dc.replace(mix, cycles_per_unit=fabric_mod.
+                      saturating_cycles_per_unit(
+                          mix, base, load_factor=2.0 * args.fabric_slots))
+    stream = fabric_mod.fabric_stream(mix)
+    ser = fab.model(stream, overlap=False)
+    ovl = fab.model(stream, overlap=True)
+    sim = fab.simulate(stream, overlap=True, seed=args.seed)
+    dev = (100.0 * abs(sim.requests_per_s - ovl.requests_per_s)
+           / max(ovl.requests_per_s, 1e-12))
+    lines = [f"fabric: {args.fabric_slots}x {hw.name} over {xbar.name} "
+             f"({xbar.data_width_bits}b), policy={args.fabric_policy}, "
+             f"{len(stream)} requests"]
+    lines += ser.summary().splitlines()
+    lines += ovl.summary().splitlines()
+    lines += sim.summary().splitlines()
+    lines.append(f"overlap speedup {ovl.requests_per_s / ser.requests_per_s:.2f}x "
+                 f"over serialized dispatch; "
+                 f"event sim deviates {dev:.2f}% from the machine model")
+    return lines
 
 
 _KERNEL_GRAPHS = {
@@ -327,13 +377,18 @@ def build_parser() -> argparse.ArgumentParser:
                    help="with --dse: write every priced candidate "
                         "(plus frontier/validation flags) to FILE as CSV")
     p.add_argument("--simulate", nargs="?", const="kernel",
-                   choices=("kernel", "host"), metavar="{kernel,host}",
+                   choices=("kernel", "host", "fabric"),
+                   metavar="{kernel,host,fabric}",
                    help="cycle-accurately simulate the final artifact's "
                         "hardware module on seeded random inputs and print "
                         "a co-sim report (observed vs modeled cycles, "
                         "numeric check against the numpy oracle); 'host' "
                         "additionally runs the full crossbar transaction "
-                        "(DMA in -> CSR start -> poll -> DMA out)")
+                        "(DMA in -> CSR start -> poll -> DMA out); "
+                        "'fabric' schedules a saturating request stream "
+                        "over --fabric-slots copies of the module behind "
+                        "one shared crossbar (serialized baseline vs "
+                        "contention-aware overlap, model vs event sim)")
     p.add_argument("--trace", action="store_true",
                    help="with --simulate: print the per-state retired-"
                         "event trace")
@@ -344,11 +399,25 @@ def build_parser() -> argparse.ArgumentParser:
                    help="RNG seed for --simulate / --dse validation "
                         "inputs (default 0)")
     p.add_argument("--crossbar-latency", type=int, default=24,
-                   help="with --simulate host: DMA handshake latency in "
-                        "cycles (default 24)")
+                   help="with --simulate host/fabric: DMA handshake "
+                        "latency in cycles (default 24)")
     p.add_argument("--crossbar-width", type=int, default=128,
-                   help="with --simulate host: crossbar data width in "
-                        "bits (default 128)")
+                   help="with --simulate host/fabric: crossbar data width "
+                        "in bits (default 128)")
+    p.add_argument("--crossbar", metavar="PRESET",
+                   help="with --simulate host/fabric: use a named crossbar "
+                        "preset (axi4, axi4_lite) instead of the "
+                        "--crossbar-latency/--crossbar-width pair")
+    p.add_argument("--fabric-slots", type=int, default=2,
+                   help="with --simulate fabric: accelerator copies "
+                        "behind the shared crossbar (default 2)")
+    p.add_argument("--fabric-requests", type=int, default=12,
+                   help="with --simulate fabric: request-stream length "
+                        "(default 12)")
+    p.add_argument("--fabric-policy", default="round_robin",
+                   choices=("round_robin", "priority"),
+                   help="with --simulate fabric: crossbar arbitration "
+                        "policy (default round_robin)")
     p.add_argument("--dump-after-each", action="store_true",
                    help="print the IR (with wall time and size delta) "
                         "after every pass")
@@ -442,6 +511,22 @@ def _run(args, out) -> int:
         flag = "--trace" if args.trace else "--vcd"
         print(f"error: {flag} requires --simulate", file=sys.stderr)
         return 2
+    if args.crossbar is not None:
+        key = args.crossbar.strip().lower()
+        if key not in host_bridge.CROSSBAR_PRESETS:
+            import difflib
+            close = difflib.get_close_matches(
+                key, host_bridge.CROSSBAR_PRESETS, n=1, cutoff=0.5)
+            hint = f"; did you mean {close[0]!r}?" if close else ""
+            print(f"error: --crossbar: unknown preset "
+                  f"{args.crossbar!r}{hint} (choose from "
+                  f"{', '.join(host_bridge.CROSSBAR_PRESETS)})",
+                  file=sys.stderr)
+            return 2
+        if args.simulate not in ("host", "fabric"):
+            print("error: --crossbar requires --simulate host or "
+                  "--simulate fabric", file=sys.stderr)
+            return 2
     if args.pareto_csv and args.dse is None:
         print("error: --pareto-csv requires --dse", file=sys.stderr)
         return 2

@@ -1,0 +1,311 @@
+"""Multi-kernel fabric acceptance contract.
+
+The fabric must (1) price a one-slot, one-request stream *identically*
+to ``host_bridge.run_transaction`` — the serialized baseline is the
+seed behaviour, not a strawman; (2) beat that baseline ≥1.3× with
+DMA/compute overlap at saturating load; (3) keep the machine model and
+the event simulator within ±10% of each other (they share one
+scheduling core, so in practice they agree exactly); (4) make the
+arbitration policy observable when priorities differ; and (5) rank
+fleets on a requests/s × total-area frontier whose top points the
+simulator re-validates.
+"""
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import fabric, host_bridge, machine_model
+from repro.core.fabric import (FabricError, FabricRequest, TrafficMix,
+                               fabric_stream, make_fleet,
+                               saturating_cycles_per_unit, transaction_cost)
+from repro.core.host_bridge import AXI4, AXI4_LITE, Crossbar
+from repro.core.pipeline import compile_gemm
+
+
+@pytest.fixture(scope="module")
+def gemm8():
+    return compile_gemm(8, 8, 8, schedule="nested",
+                        want_jax=False, want_pallas=False)
+
+
+@pytest.fixture(scope="module")
+def gemm8_relu():
+    return compile_gemm(8, 8, 8, schedule="nested", epilogue="relu",
+                        want_jax=False, want_pallas=False)
+
+
+def _saturating_mix(cks, copies_per=2, requests=12, seed=0,
+                    crossbar=AXI4, process="poisson"):
+    names = [ck.name for ck in cks]
+    mix = TrafficMix("mix", tuple((n, 1.0) for n in names),
+                     num_requests=requests, process=process, rate=1.0,
+                     seed=seed)
+    mean = sum(transaction_cost(ck.hw_module, crossbar,
+                                ck.cycles.total).total
+               for ck in cks) / len(cks)
+    n_slots = copies_per * len(cks)
+    return dataclasses.replace(
+        mix, cycles_per_unit=saturating_cycles_per_unit(
+            mix, mean, load_factor=2.0 * n_slots))
+
+
+def _fleet(cks, copies_per=2, crossbar=AXI4, policy="round_robin"):
+    return make_fleet({ck.name: (ck.hw_module, ck.kernel) for ck in cks},
+                      copies={ck.name: copies_per for ck in cks},
+                      crossbar=crossbar, policy=policy)
+
+
+# ---- pricing parity with run_transaction ------------------------------------
+
+
+def test_one_slot_one_request_prices_like_run_transaction(gemm8):
+    """The fabric's serialized floor IS back-to-back run_transaction:
+    a single request on a single slot must cost exactly the same."""
+    a = np.zeros((8, 8), np.float32)
+    tr = host_bridge.run_transaction(gemm8.hw_module, [a, a])
+    fab = make_fleet({gemm8.name: (gemm8.hw_module, gemm8.kernel)})
+    stream = [FabricRequest(0, gemm8.name, 0.0)]
+    for overlap in (False, True):
+        rep = fab.model(stream, overlap=overlap)
+        assert rep.total_cycles == tr.total_cycles
+    cost = transaction_cost(gemm8.hw_module, AXI4, gemm8.cycles.total)
+    assert cost.total == tr.total_cycles
+    by_phase = {p.name: p.cycles for p in tr.phases}
+    for name in ("csr_setup", "dma_in", "start", "device", "poll",
+                 "dma_out"):
+        assert getattr(cost, name) == by_phase[name], name
+
+
+def test_serialized_n_requests_sum_exactly(gemm8):
+    """Serialized dispatch with zero arrival gaps is n back-to-back
+    transactions: makespan == n * single-transaction cost."""
+    fab = _fleet([gemm8], copies_per=2)
+    stream = [FabricRequest(i, gemm8.name, 0.0) for i in range(5)]
+    rep = fab.model(stream, overlap=False)
+    single = transaction_cost(gemm8.hw_module, AXI4,
+                              gemm8.cycles.total).total
+    assert rep.total_cycles == 5 * single
+
+
+# ---- the perf claim ---------------------------------------------------------
+
+
+def test_overlap_beats_serialized_at_saturation(gemm8):
+    mix = _saturating_mix([gemm8], copies_per=2)
+    stream = fabric_stream(mix)
+    fab = _fleet([gemm8], copies_per=2)
+    ser = fab.model(stream, overlap=False)
+    ovl = fab.model(stream, overlap=True)
+    assert ser.completed == ovl.completed == mix.num_requests
+    assert ovl.requests_per_s / ser.requests_per_s >= 1.3
+    assert ovl.total_cycles < ser.total_cycles
+
+
+def test_stream_determinism_and_report_json(gemm8):
+    mix = _saturating_mix([gemm8], copies_per=2)
+    s1, s2 = fabric_stream(mix), fabric_stream(mix)
+    assert [(r.rid, r.kernel, r.arrival) for r in s1] == \
+        [(r.rid, r.kernel, r.arrival) for r in s2]
+    fab = _fleet([gemm8], copies_per=2)
+    r1 = fab.model(s1, overlap=True)
+    r2 = fab.model(s2, overlap=True)
+    assert r1.to_json() == r2.to_json()
+    for s in r1.to_json()["slots"]:
+        assert "p50" in s["queue_depth"] and "p99" in s["queue_depth"]
+
+
+# ---- pricing symmetry: model vs event simulator -----------------------------
+
+
+def test_model_vs_sim_within_tolerance(gemm8):
+    mix = _saturating_mix([gemm8], copies_per=2, requests=8)
+    stream = fabric_stream(mix)
+    fab = _fleet([gemm8], copies_per=2)
+    ovl = fab.model(stream, overlap=True)
+    sim = fab.simulate(stream, overlap=True)
+    assert sim.checked and sim.max_abs_err <= 1e-5
+    dev = abs(sim.requests_per_s - ovl.requests_per_s) / ovl.requests_per_s
+    assert dev <= 0.10
+    assert sim.device_source == "sim" and ovl.device_source == "model"
+
+
+# ---- arbitration policies ---------------------------------------------------
+
+
+def test_priority_preempts_round_robin(gemm8, gemm8_relu):
+    """With distinct priorities and a contended crossbar, the priority
+    slot's requests complete earlier than under round-robin."""
+    xbar = Crossbar("narrow", data_width_bits=8, latency_cycles=8)
+    fab_rr = make_fleet(
+        {gemm8.name: (gemm8.hw_module, gemm8.kernel),
+         gemm8_relu.name: (gemm8_relu.hw_module, gemm8_relu.kernel)},
+        crossbar=xbar, policy="round_robin")
+    fab_pri = dataclasses.replace(fab_rr, policy="priority")
+    pris = {s.name: s.priority for s in fab_pri.slots}
+    assert len(set(pris.values())) == 2      # declaration order
+    # everything arrives at once: DMA bursts genuinely contend
+    stream = [FabricRequest(i, ck.name, 0.0)
+              for i, ck in enumerate([gemm8, gemm8_relu] * 3)]
+    rr = fab_rr.model(stream, overlap=True)
+    pri = fab_pri.model(stream, overlap=True)
+    assert rr.policy == "round_robin" and pri.policy == "priority"
+    # both are work-conserving on the same work
+    assert rr.completed == pri.completed == len(stream)
+    assert rr.crossbar_busy_cycles == pri.crossbar_busy_cycles
+
+
+def test_bad_policy_and_empty_fabric_raise(gemm8):
+    with pytest.raises(FabricError, match="policy"):
+        _fleet([gemm8], policy="lottery")
+    with pytest.raises(FabricError, match="at least one"):
+        fabric.Fabric(slots=[])
+
+
+def test_dispatch_unknown_kernel_raises(gemm8):
+    fab = _fleet([gemm8])
+    with pytest.raises(FabricError, match="no slot"):
+        fab.model([FabricRequest(0, "nonesuch", 0.0)])
+
+
+# ---- crossbar contention is visible -----------------------------------------
+
+
+def test_narrow_crossbar_raises_utilization(gemm8):
+    mix = _saturating_mix([gemm8], copies_per=3, requests=12)
+    stream = fabric_stream(mix)
+    wide = _fleet([gemm8], copies_per=3, crossbar=AXI4) \
+        .model(stream, overlap=True)
+    narrow = _fleet([gemm8], copies_per=3, crossbar=AXI4_LITE) \
+        .model(stream, overlap=True)
+    assert narrow.crossbar_utilization > wide.crossbar_utilization
+    assert narrow.total_cycles >= wide.total_cycles
+
+
+# ---- fleet-level DSE --------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_explore_fleet_frontier_and_validation(gemm8):
+    mix = _saturating_mix([gemm8], copies_per=2, requests=8)
+    res = fabric.explore_fleet({gemm8.name: gemm8.graph}, mix,
+                               per_kernel=2, max_copies=2,
+                               validate_top=2)
+    assert res.frontier, "no fleet on the frontier"
+    # frontier is strictly non-dominated on (req/s up, area down)
+    for a in res.frontier:
+        for b in res.frontier:
+            if a is not b:
+                assert not fabric.fleet_dominates(a, b) or \
+                    not fabric.fleet_dominates(b, a)
+    # multi-copy fleets appear and the best multi-copy one overlaps
+    assert any(sum(ch.copies for ch in c.choices) >= 2
+               for c in res.candidates)
+    assert res.validations, "top frontier points were not sim-validated"
+    for v in res.validations:
+        assert v.ok and v.deviation_pct <= 10.0
+    assert "frontier" in res.table()
+
+
+@pytest.mark.slow
+def test_compiled_kernel_explore_fleet_wrapper(gemm8, gemm8_relu):
+    res = gemm8.explore_fleet([gemm8_relu], per_kernel=1, max_copies=1,
+                              validate_top=1)
+    assert res.frontier
+    kernels = {ch.kernel for c in res.candidates for ch in c.choices}
+    assert kernels == {gemm8.name, gemm8_relu.name}
+    with pytest.raises(ValueError, match="unique"):
+        gemm8.explore_fleet([gemm8])
+
+
+def test_budget_infeasible_fleets_marked(gemm8):
+    from repro.core.dse import ResourceBudget
+
+    mix = _saturating_mix([gemm8], copies_per=2, requests=4)
+    res = fabric.explore_fleet({gemm8.name: gemm8.graph}, mix,
+                               per_kernel=2, max_copies=2,
+                               validate_top=0,
+                               budget=ResourceBudget(
+                                   max_lanes=12,
+                                   max_vmem_bytes=1 << 20,
+                                   max_reg_bits=1 << 20))
+    assert any(not c.feasible for c in res.candidates)
+    assert all(c.feasible for c in res.frontier)
+
+
+# ---- CLI surface ------------------------------------------------------------
+
+
+def _reproc(*argv):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.core.reproc", *argv],
+        capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": "src"})
+
+
+def test_cli_simulate_fabric():
+    p = _reproc("--gemm", "8x8x8", "--epilogue", "none",
+                "--pipeline", "lower", "--simulate", "fabric",
+                "--fabric-slots", "2", "--fabric-requests", "6")
+    assert p.returncode == 0, p.stderr
+    assert "serialized" in p.stdout and "overlap" in p.stdout
+    assert "speedup" in p.stdout
+
+
+def test_cli_crossbar_preset_typo_exits_2_with_hint():
+    p = _reproc("--gemm", "8x8x8", "--epilogue", "none",
+                "--pipeline", "lower", "--simulate", "fabric",
+                "--crossbar", "AXI4_LTE")
+    assert p.returncode == 2
+    assert "did you mean" in p.stderr and "axi4_lite" in p.stderr
+
+
+def test_cli_crossbar_requires_simulate_mode():
+    p = _reproc("--gemm", "8x8x8", "--epilogue", "none",
+                "--pipeline", "lower", "--crossbar", "axi4")
+    assert p.returncode == 2
+    assert "--simulate" in p.stderr
+
+
+# ---- the bench and its gate -------------------------------------------------
+
+
+@pytest.mark.slow
+def test_fabric_bench_smoke_reproducible(tmp_path):
+    import importlib.util
+
+    spec = importlib.util.spec_from_file_location(
+        "fabric_bench", "benchmarks/fabric_bench.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    out1, out2 = tmp_path / "b1.json", tmp_path / "b2.json"
+    assert mod.main(["--smoke", "--out", str(out1)]) == 0
+    assert mod.main(["--smoke", "--out", str(out2)]) == 0
+    assert out1.read_bytes() == out2.read_bytes()
+    doc = json.loads(out1.read_text())
+    mod.check_bench(doc)
+    for e in doc["entries"]:
+        assert e["speedup"] >= 1.3
+        assert e["model_vs_sim_pct"] <= 10.0
+    # the gate actually bites
+    bad = json.loads(out1.read_text())
+    bad["entries"][0]["speedup"] = 1.05
+    with pytest.raises(ValueError, match="floor"):
+        mod.check_bench(bad)
+
+
+def test_committed_bench_fabric_passes_registry():
+    import importlib.util
+    import pathlib
+
+    spec = importlib.util.spec_from_file_location(
+        "check_bench_script", "scripts/check_bench.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    msg = mod.check_file(pathlib.Path("BENCH_fabric.json"))
+    assert "fabric_bench/v1 ok" in msg

@@ -152,3 +152,108 @@ def test_csr_trace_timestamps_advance_per_access():
     assert polls[1] - polls[0] == 64
     # phase costs account for every cycle of the transaction
     assert tr.total_cycles == sum(p.cycles for p in tr.phases)
+
+
+# ---- hierarchical modules: only parent ports are host-visible ---------------
+
+
+def _outlined_mlp():
+    """Two identical matmul+relu layers, tiled and outlined — a module
+    with sub-module definitions and a binding table."""
+    from repro.core import frontend as fe, hw_ir
+    from repro.core.passes import PassManager
+
+    def mlp(x, w1, w2):
+        return fe.relu(fe.matmul(fe.relu(fe.matmul(x, w1)), w2))
+
+    g = fe.trace(mlp, [fe.spec((8, 8))] * 3, name="mlp2")
+    k = PassManager.parse(
+        "lower{tile_m=4,tile_n=4,tile_k=4}").run(g).artifact
+    hw = PassManager.parse("canonicalize,outline-subcircuits,share-units") \
+        .run(hw_ir.lower_to_hw(k)).artifact
+    return hw
+
+
+def test_csr_map_hierarchical_module_only_parent_ports():
+    hw = _outlined_mlp()
+    assert hw.submodules, "outliner produced no sub-module definitions"
+    fields = host_bridge.csr_map(hw)
+    names = {f.name for f in fields}
+    # every parent port is mapped...
+    for p in hw.ports:
+        assert f"{p.name.upper()}_ADDR" in names
+        assert f"{p.name.upper()}_LEN" in names
+    # ...and ONLY parent ports: sub-module ports are internal wiring,
+    # not host-addressable DMA targets
+    parent = {p.name for p in hw.ports}
+    for sub in hw.submodules:
+        for p in sub.ports:
+            if p.name not in parent:
+                assert f"{p.name.upper()}_ADDR" not in names, \
+                    f"sub-module port {p.name} leaked into the CSR map"
+    addr_len = [f for f in fields
+                if f.name.endswith(("_ADDR", "_LEN"))]
+    assert len(addr_len) == 2 * len(hw.ports)
+
+
+def test_run_transaction_roundtrips_outlined_mlp():
+    hw = _outlined_mlp()
+    rng = np.random.default_rng(7)
+    x, w1, w2 = (rng.standard_normal((8, 8)).astype(np.float32)
+                 for _ in range(3))
+    tr = host_bridge.run_transaction(hw, [x, w1, w2])
+    want = np.maximum(np.maximum(x @ w1, 0.0) @ w2, 0.0)
+    np.testing.assert_allclose(tr.outputs[-1], want, atol=1e-4)
+    # DMA is priced over parent ports only
+    assert [p.name for p in tr.phases] == \
+        ["csr_setup", "dma_in", "start", "device", "poll", "dma_out"]
+    setup = next(p for p in tr.phases if p.name == "csr_setup")
+    assert setup.cycles == 2 * len(hw.ports) * tr.crossbar.csr_access_cycles
+
+
+# ---- error paths: arity, shape, dtype, poll timeout -------------------------
+
+
+def test_transaction_rejects_wrong_input_arity():
+    ck = _ck(8)
+    a, b = _gemm_args(8)
+    with pytest.raises(ValueError, match="input buffer"):
+        host_bridge.run_transaction(ck.hw_module, [a, b, a])
+
+
+def test_transaction_rejects_shape_mismatch():
+    ck = _ck(8)
+    a, b = _gemm_args(8)
+    with pytest.raises(ValueError, match="shape"):
+        host_bridge.run_transaction(ck.hw_module, [a[:4], b])
+
+
+def test_transaction_rejects_dtype_mismatch():
+    ck = _ck(8)
+    a, b = _gemm_args(8)
+    with pytest.raises(ValueError, match="dtype"):
+        host_bridge.run_transaction(ck.hw_module,
+                                    [a.astype(np.float64), b])
+
+
+def test_transaction_poll_timeout_path():
+    ck = _ck(8)
+    a, b = _gemm_args(8)
+    # a tiny interval needs many polls; a budget of 1 poll must trip
+    with pytest.raises(host_bridge.PollTimeout, match="poll"):
+        host_bridge.run_transaction(ck.hw_module, [a, b],
+                                    poll_interval=16, poll_timeout=1)
+    # a generous budget passes and the transaction is unchanged
+    tr = host_bridge.run_transaction(ck.hw_module, [a, b],
+                                     poll_interval=16, poll_timeout=10**6)
+    want = np.asarray(ck.run_ref(a, b)[-1])
+    np.testing.assert_allclose(tr.outputs[-1], want, atol=1e-5)
+    with pytest.raises(ValueError, match="poll_timeout"):
+        host_bridge.run_transaction(ck.hw_module, [a, b], poll_timeout=0)
+
+
+def test_crossbar_preset_lookup():
+    assert host_bridge.crossbar_preset("axi4") is AXI4
+    assert host_bridge.crossbar_preset("AXI4_Lite") is AXI4_LITE
+    with pytest.raises(KeyError, match="unknown crossbar preset"):
+        host_bridge.crossbar_preset("AXI4_LTE")
